@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: cached workload traces + CSV/JSON emission.
+
+Every benchmark module reproduces one paper table/figure and exposes
+``run() -> list[dict]``; ``benchmarks.run`` executes all of them and tees
+CSV artifacts under ``benchmarks/artifacts/``.
+"""
+from __future__ import annotations
+
+import csv
+import functools
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import trace_program
+from repro.core.cache import CacheConfig
+from repro.workloads import build
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+_TRACE_CACHE: Dict[Tuple, object] = {}
+
+
+def cached_trace(name: str, cache_levels: Optional[Tuple[CacheConfig, ...]] = None):
+    key = (name, cache_levels)
+    if key not in _TRACE_CACHE:
+        fn, args = build(name)
+        kw = {} if cache_levels is None else {"cache_levels": cache_levels}
+        _TRACE_CACHE[key] = trace_program(fn, *args, **kw)
+    return _TRACE_CACHE[key]
+
+
+def emit(name: str, rows: List[dict]) -> pathlib.Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    path = ART / f"{name}.csv"
+    if rows:
+        fields = list(dict.fromkeys(k for r in rows for k in r))
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    (ART / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+    return path
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} " + "=" * max(0, 66 - len(title)), flush=True)

@@ -1,0 +1,38 @@
+"""Fig. 14: energy improvement under three cache configurations
+(32K/256K, 64K/256K, 64K/2M) — exercises the DESTINY-surrogate scaling and
+the paper's finding that bigger arrays raise per-op CiM energy."""
+from __future__ import annotations
+
+from repro.core import L1_32K, L1_64K, L2_256K, L2_2M, profile_system
+from benchmarks.common import banner, cached_trace, emit
+
+BENCHES = ("NB", "DT", "KM", "LCS", "BFS", "SSSP", "CCOMP", "hmmer", "mcf")
+CFGS = [("32K+256K", (L1_32K, L2_256K)),
+        ("64K+256K", (L1_64K, L2_256K)),
+        ("64K+2M", (L1_64K, L2_2M))]
+
+
+def run():
+    rows = []
+    for name in BENCHES:
+        row = {"benchmark": name}
+        for cfg_name, levels in CFGS:
+            tr = cached_trace(name, levels)
+            rep = profile_system(tr)
+            row[cfg_name] = round(rep.energy_improvement, 3)
+        rows.append(row)
+    return rows
+
+
+def main():
+    banner("Fig. 14: energy improvement vs cache configuration")
+    rows = run()
+    for r in rows:
+        print(f"  {r['benchmark']:8s} " +
+              " ".join(f"{n}={r[n]:5.2f}" for n, _ in CFGS))
+    emit("fig14_cache_cfg", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fig. 15: energy improvement with CiM in L1 only, L2 only, or both —
+the paper's 'which level should host the CiM?' question."""
+from __future__ import annotations
+
+from repro.core import OffloadConfig, profile_system
+from benchmarks.common import banner, cached_trace, emit
+
+BENCHES = ("NB", "DT", "KM", "LCS", "BFS", "SSSP", "CCOMP", "hmmer", "mcf")
+LEVELS = [("L1_only", ("L1",)), ("L2_only", ("L2",)), ("both", ("L1", "L2"))]
+
+
+def run():
+    rows = []
+    for name in BENCHES:
+        tr = cached_trace(name)
+        row = {"benchmark": name}
+        for lname, lv in LEVELS:
+            rep = profile_system(tr, OffloadConfig(cim_levels=lv))
+            row[lname] = round(rep.energy_improvement, 3)
+        row["l2_worst"] = row["L2_only"] <= min(row["L1_only"], row["both"]) + 1e-9
+        rows.append(row)
+    return rows
+
+
+def main():
+    banner("Fig. 15: energy improvement vs CiM level")
+    rows = run()
+    for r in rows:
+        print(f"  {r['benchmark']:8s} L1 {r['L1_only']:5.2f}  "
+              f"L2 {r['L2_only']:5.2f}  both {r['both']:5.2f}"
+              f"{'   (L2-only lowest ok)' if r['l2_worst'] else ''}")
+    emit("fig15_levels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig. 16: SRAM vs FeFET CiM — energy improvement normalized to the SRAM
+non-CiM baseline (the paper's normalization) + speedup comparison."""
+from __future__ import annotations
+
+from repro.core import profile_system
+from repro.workloads import WORKLOADS
+from benchmarks.common import banner, cached_trace, emit
+
+
+def run():
+    rows = []
+    for name in WORKLOADS:
+        tr = cached_trace(name)
+        sram = profile_system(tr, tech="sram")
+        fefet = profile_system(tr, tech="fefet")
+        base = sram.base.total                       # SRAM non-CiM baseline
+        rows.append({
+            "benchmark": name,
+            "sram_improvement": round(base / sram.cim.total, 3),
+            "fefet_improvement": round(base / fefet.cim.total, 3),
+            "sram_speedup": round(sram.speedup, 3),
+            "fefet_speedup": round(fefet.speedup, 3),
+            "fefet_gain_pct": round(
+                (base / fefet.cim.total) / (base / sram.cim.total) * 100 - 100, 1),
+        })
+    return rows
+
+
+def main():
+    banner("Fig. 16: SRAM vs FeFET (normalized to SRAM non-CiM baseline)")
+    rows = run()
+    for r in rows:
+        print(f"  {r['benchmark']:8s} E-imp SRAM {r['sram_improvement']:5.2f} "
+              f"FeFET {r['fefet_improvement']:5.2f} ({r['fefet_gain_pct']:+5.1f}%)  "
+              f"spd {r['sram_speedup']:.2f}/{r['fefet_speedup']:.2f}")
+    gains = [r["fefet_gain_pct"] for r in rows]
+    print(f"  FeFET gain range: {min(gains):+.1f}% .. {max(gains):+.1f}% "
+          f"(paper: +50-70%)")
+    emit("fig16_tech", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

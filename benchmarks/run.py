@@ -1,0 +1,44 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table6     # one artifact
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig12_macr_validation, fig13_macr, fig14_cache_cfg,
+                        fig15_levels, fig16_tech, roofline, table3_energy,
+                        table5_validation, table6_speedup, tpu_macr)
+
+ALL = {
+    "table3": table3_energy,
+    "table5": table5_validation,
+    "fig12": fig12_macr_validation,
+    "fig13": fig13_macr,
+    "table6": table6_speedup,
+    "fig14": fig14_cache_cfg,
+    "fig15": fig15_levels,
+    "fig16": fig16_tech,
+    "tpu_macr": tpu_macr,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    picks = argv or list(ALL)
+    t0 = time.time()
+    for name in picks:
+        if name not in ALL:
+            print(f"unknown benchmark {name!r}; known: {sorted(ALL)}")
+            return 1
+        ALL[name].main()
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s "
+          f"({len(picks)} artifacts under benchmarks/artifacts/)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

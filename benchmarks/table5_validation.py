@@ -1,0 +1,67 @@
+"""Table V: validation of the profiler's array-level pricing against the
+DESTINY-style device model on an LCS instruction trace (paper: 3000-instr
+LCS; CiM 455-565 nJ vs non-CiM 124-154 nJ, 24% deviation band).
+
+We compare (a) the energy of the CiM instruction stream priced via the full
+system profiler vs (b) the same operation counts priced directly from the
+device model (the DESTINY surrogate) — the paper's "Eva-CiM vs DESTINY"
+axis.  Deviation must stay inside the paper's ~24% band + margin."""
+from __future__ import annotations
+
+from repro.core import (CIM_SET_STT, OffloadConfig, Profiler, reshape,
+                        select_candidates, TECHS)
+from benchmarks.common import banner, cached_trace, emit
+
+
+def run():
+    tr = cached_trace("LCS")
+    res = select_candidates(tr.trace, tr.rut, tr.iht,
+                            OffloadConfig(cim_set=CIM_SET_STT))
+    rs = reshape(tr.trace, res)
+    prof = Profiler(tuple(l.cfg for l in tr.cache.levels), tech="sram")
+    _, _ = prof.price_baseline(tr.trace)
+    cim_eb, _ = prof.price_cim(tr.trace, rs)
+
+    # (a) profiler's CiM-array energy (interactions included)
+    profiler_cim_nj = sum(cim_eb.cim.values()) / 1e3
+    # (b) DESTINY-surrogate direct pricing of the same op counts
+    tech = TECHS["sram"]
+    levels = {l.cfg.name: l.cfg for l in tr.cache.levels}
+    destiny_cim_nj = sum(
+        tech.energy(cls, levels[g.level])
+        for g in rs.cim_groups for cls in g.op_classes) / 1e3
+    # same comparison for the regular (non-CiM) accesses they replace
+    destiny_noncim_nj = sum(
+        tech.energy("write" if tr.trace[s].is_store else "read",
+                    levels.get(tr.trace[s].level, levels["L1"])
+                    if tr.trace[s].level != "MEM" else levels["L2"])
+        for c in res.candidates for s in c.load_seqs + c.store_seqs) / 1e3
+    profiler_noncim_nj = destiny_noncim_nj  # identical pricing source
+    dev = abs(profiler_cim_nj - destiny_cim_nj) / max(destiny_cim_nj, 1e-9)
+    rows = [{
+        "model": "DESTINY-surrogate", "cim_nj": round(destiny_cim_nj, 2),
+        "non_cim_nj": round(destiny_noncim_nj, 2)},
+        {"model": "Eva-CiM profiler", "cim_nj": round(profiler_cim_nj, 2),
+         "non_cim_nj": round(profiler_noncim_nj, 2)},
+        {"model": "deviation", "cim_nj": round(dev * 100, 1),
+         "non_cim_nj": 0.0},
+    ]
+    # the paper's own Table V ratio: CiM energy ~3.7x non-CiM on this trace
+    ratio = profiler_cim_nj / max(profiler_noncim_nj, 1e-9)
+    rows.append({"model": "cim/non-cim ratio (paper ~3.7)",
+                 "cim_nj": round(ratio, 2), "non_cim_nj": 0.0})
+    return rows
+
+
+def main():
+    banner("Table V: Eva-CiM vs DESTINY-surrogate (LCS trace)")
+    rows = run()
+    for r in rows:
+        print(f"  {r['model']:32s} CiM {r['cim_nj']:9.2f}  "
+              f"non-CiM {r['non_cim_nj']:9.2f}")
+    emit("table5_validation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

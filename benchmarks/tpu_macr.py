@@ -1,0 +1,53 @@
+"""TPU-mode Eva-CiM: fusion-candidate analysis (the TPU-MACR) over every
+assigned architecture's reduced train step — 'is this model step
+CiM/fusion-favorable on the TPU memory hierarchy?' (DESIGN.md §3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, reduced_config
+from repro.core.hlo import fusion_candidates
+from repro.models import inputs as minputs
+from repro.train import steps as steps_mod
+from benchmarks.common import banner, emit
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    for arch in sorted(ARCHS):
+        cfg = reduced_config(arch)
+        state = jax.eval_shape(lambda r: steps_mod.init_train_state(r, cfg), rng)
+        batch = minputs.make_train_batch(rng, cfg, batch=2, seq_len=32)
+        step = steps_mod.make_train_step(cfg, TrainConfig())
+        jx = jax.make_jaxpr(step)(
+            jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), state),
+            batch)
+        rep = fusion_candidates(jx)
+        big = max(rep.candidates, key=lambda c: c.saved_bytes, default=None)
+        rows.append({
+            "arch": arch,
+            "n_candidates": len(rep.candidates),
+            "total_mb": round(rep.total_bytes / 1e6, 2),
+            "saved_mb": round(rep.saved_bytes / 1e6, 2),
+            "tpu_macr": round(rep.tpu_macr, 4),
+            "biggest_chain_ops": big.n_ops if big else 0,
+        })
+    return rows
+
+
+def main():
+    banner("TPU-mode MACR: VMEM-fusion candidates per arch (reduced step)")
+    rows = run()
+    for r in rows:
+        print(f"  {r['arch']:24s} cands {r['n_candidates']:4d} "
+              f"traffic {r['total_mb']:8.2f}MB eliminable {r['saved_mb']:8.2f}MB "
+              f"tpu_macr {r['tpu_macr']:.3f} (max chain {r['biggest_chain_ops']})")
+    emit("tpu_macr", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

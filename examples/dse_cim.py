@@ -1,0 +1,54 @@
+"""Design-space exploration (the paper's three questions, §VI-D/E):
+
+  1. Is this program CiM-favorable?          -> MACR + improvement
+  2. Which cache level should host the CiM?  -> L1-only vs L2-only vs both
+  3. Which technology?                       -> SRAM vs FeFET
+
+    PYTHONPATH=src python examples/dse_cim.py --workload KM
+"""
+import argparse
+import sys
+
+from repro.core import (CIM_SET_STT, L1_32K, L1_64K, L2_256K, L2_2M,
+                        OffloadConfig, profile_system, trace_program)
+from repro.workloads import WORKLOADS, build
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="KM", choices=sorted(WORKLOADS))
+    args = ap.parse_args(argv)
+
+    fn, wargs = build(args.workload)
+
+    print(f"== {args.workload}: cache-configuration sweep (Fig. 14) ==")
+    for name, levels in (("32K/4w L1 + 256K/8w L2", (L1_32K, L2_256K)),
+                         ("64K/4w L1 + 256K/8w L2", (L1_64K, L2_256K)),
+                         ("64K/4w L1 + 2M/8w L2", (L1_64K, L2_2M))):
+        tr = trace_program(fn, *wargs, cache_levels=levels)
+        rep = profile_system(tr)
+        print(f"  {name:26s} E-impr {rep.energy_improvement:5.2f}x "
+              f"speedup {rep.speedup:5.2f}x macr {rep.macr:.3f}")
+
+    print("== CiM level (Fig. 15) ==")
+    tr = trace_program(fn, *wargs)
+    for name, lv in (("L1 only", ("L1",)), ("L2 only", ("L2",)),
+                     ("L1 + L2", ("L1", "L2"))):
+        rep = profile_system(tr, OffloadConfig(cim_set=CIM_SET_STT,
+                                               cim_levels=lv))
+        print(f"  {name:10s} E-impr {rep.energy_improvement:5.2f}x "
+              f"speedup {rep.speedup:5.2f}x")
+
+    print("== technology (Fig. 16) ==")
+    base_sram = profile_system(tr, tech="sram")
+    for tech in ("sram", "fefet"):
+        rep = profile_system(tr, tech=tech)
+        # paper normalizes to the SRAM non-CiM baseline
+        cross = base_sram.base.total / rep.cim.total
+        print(f"  {tech:6s} E-impr vs SRAM-baseline {cross:5.2f}x "
+              f"speedup {rep.speedup:5.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Table VI end-to-end: trace + analyze all 17 benchmark applications and
+print speedup / energy improvement / MACR / breakdown per program.
+
+    PYTHONPATH=src python examples/evaluate_workloads.py [--tech fefet]
+"""
+import argparse
+import sys
+import time
+
+from repro.core import (CIM_SET_FULL, CIM_SET_STT, OffloadConfig,
+                        profile_system, trace_program)
+from repro.workloads import CATEGORY, WORKLOADS, build
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tech", default="sram", choices=["sram", "fefet"])
+    ap.add_argument("--cim-set", default="stt", choices=["stt", "full"])
+    args = ap.parse_args(argv)
+    cim_set = CIM_SET_STT if args.cim_set == "stt" else CIM_SET_FULL
+
+    print(f"{'bench':9s} {'cat':7s} {'instrs':>8s} {'MACR':>6s} {'E-impr':>7s} "
+          f"{'speedup':>8s} {'proc':>6s} {'cache':>6s} {'verdict'}")
+    for name in WORKLOADS:
+        t0 = time.time()
+        fn, wargs = build(name)
+        tr = trace_program(fn, *wargs)
+        rep = profile_system(tr, OffloadConfig(cim_set=cim_set),
+                             tech=args.tech)
+        verdict = "favorable" if rep.cim_favorable else "unfavorable"
+        print(f"{name:9s} {CATEGORY[name]:7s} {tr.n_instructions:8d} "
+              f"{rep.macr:6.3f} {rep.energy_improvement:7.2f} "
+              f"{rep.speedup:8.2f} {rep.processor_ratio:6.2f} "
+              f"{rep.cache_ratio:6.2f} {verdict}  ({time.time()-t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+                                   save_checkpoint)

@@ -1,0 +1,33 @@
+"""Eva-CiM core: the paper's contribution as a composable library.
+
+Pipeline (paper Fig. 1):
+
+    trace_program (GEM5+probes)  ->  select_candidates (IDG, Alg. 1+2)
+        ->  reshape (SIV-C)  ->  profile_system (modified McPAT)
+
+plus the TPU-mode adaptation (``hlo_analysis`` / ``tpu_model`` /
+``roofline``) that applies the same dependency-graph offload analysis to
+compiled XLA programs — see DESIGN.md S3.
+"""
+from repro.core.cache import (CacheConfig, CacheHierarchy, L1_32K, L1_64K,
+                              L2_256K, L2_2M, SPM_1M)
+from repro.core.device_model import FEFET, SRAM, TECHS, TechModel
+from repro.core.host_model import DEFAULT_HOST, HostModel
+from repro.core.idg import IDGBuilder, IDGNode, build_flow_index
+from repro.core.isa import (CIM_SET_FULL, CIM_SET_LOGIC, CIM_SET_STT, Inst,
+                            Trace)
+from repro.core.offload import (Candidate, OffloadConfig, OffloadResult,
+                                select_candidates)
+from repro.core.profiler import Profiler, SystemReport, profile_system
+from repro.core.reshape import ReshapedTrace, reshape
+from repro.core.trace import Machine, TraceResult, trace_program
+
+__all__ = [
+    "CacheConfig", "CacheHierarchy", "L1_32K", "L1_64K", "L2_256K", "L2_2M",
+    "SPM_1M", "FEFET", "SRAM", "TECHS", "TechModel", "DEFAULT_HOST",
+    "HostModel", "IDGBuilder", "IDGNode", "build_flow_index", "CIM_SET_FULL",
+    "CIM_SET_LOGIC", "CIM_SET_STT", "Inst", "Trace", "Candidate",
+    "OffloadConfig", "OffloadResult", "select_candidates", "Profiler",
+    "SystemReport", "profile_system", "ReshapedTrace", "reshape", "Machine",
+    "TraceResult", "trace_program",
+]

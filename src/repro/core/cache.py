@@ -1,0 +1,181 @@
+"""Multi-level set-associative cache simulator (the trace VM's memory system).
+
+Mirrors the slice of GEM5 the paper's Request/Access probes observe: every
+load/store walks L1 -> L2 -> MEM with LRU replacement, write-back +
+write-allocate, per-level banking, and a small MSHR file whose state is
+recorded on each access (Table I "response from slave").
+
+The simulator answers the question Eva-CiM's analysis stage needs per access:
+*which level currently holds the line* (data locality for offload selection),
+plus hit/miss statistics for the profiler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+LINE = 64                                # bytes per cache line
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    name: str                            # "L1" | "L2"
+    size: int                            # bytes
+    assoc: int
+    banks: int = 4
+    mshrs: int = 8
+
+    @property
+    def n_sets(self) -> int:
+        return max(1, self.size // (LINE * self.assoc))
+
+
+# Paper §VI setup: 32KB/4-way L1 + 256KB/8-way L2 (validation), with
+# 64KB/4-way and 2MB/8-way variants for the Fig. 14 DSE.
+L1_32K = CacheConfig("L1", 32 * 1024, 4)
+L1_64K = CacheConfig("L1", 64 * 1024, 4)
+L2_256K = CacheConfig("L2", 256 * 1024, 8)
+L2_2M = CacheConfig("L2", 2 * 1024 * 1024, 8)
+SPM_1M = CacheConfig("L1", 1024 * 1024, 8)    # [23]-style single-level SPM
+
+
+class _Level:
+    __slots__ = ("cfg", "sets", "hits", "misses", "writebacks", "mshr")
+
+    def __init__(self, cfg: CacheConfig):
+        self.cfg = cfg
+        # set index -> OrderedDict(tag -> dirty); LRU order = insertion order
+        self.sets: List[OrderedDict] = [OrderedDict() for _ in range(cfg.n_sets)]
+        self.hits = 0
+        self.misses = 0
+        self.writebacks = 0
+        self.mshr: OrderedDict = OrderedDict()   # line -> outstanding count
+
+    def lookup(self, line: int) -> bool:
+        s = self.sets[line % self.cfg.n_sets]
+        if line in s:
+            s.move_to_end(line)
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def fill(self, line: int, dirty: bool = False) -> Optional[int]:
+        """Insert line; returns evicted dirty line (writeback victim) or None."""
+        s = self.sets[line % self.cfg.n_sets]
+        victim = None
+        if line in s:
+            s[line] = s[line] or dirty
+            s.move_to_end(line)
+            return None
+        if len(s) >= self.cfg.assoc:
+            v_line, v_dirty = s.popitem(last=False)
+            if v_dirty:
+                self.writebacks += 1
+                victim = v_line
+        s[line] = dirty
+        return victim
+
+    def mark_dirty(self, line: int) -> None:
+        s = self.sets[line % self.cfg.n_sets]
+        if line in s:
+            s[line] = True
+
+    def mshr_probe(self, line: int) -> bool:
+        """True if this miss merges into an in-flight MSHR entry."""
+        if line in self.mshr:
+            self.mshr[line] += 1
+            return True
+        if len(self.mshr) >= self.cfg.mshrs:
+            self.mshr.popitem(last=False)            # oldest entry retires
+        self.mshr[line] = 1
+        return False
+
+    def bank_of(self, addr: int) -> int:
+        return (addr // LINE) % self.cfg.banks
+
+
+@dataclasses.dataclass
+class AccessResult:
+    level: str                            # "L1" | "L2" | "MEM" (service level)
+    hit: bool                             # hit at the *first* level probed
+    bank: int                             # bank id at the service level
+    mshr: bool                            # merged into an outstanding miss
+    line: int
+
+
+class CacheHierarchy:
+    """L1 + optional L2 in front of main memory (inclusive, write-allocate)."""
+
+    def __init__(self, levels: Tuple[CacheConfig, ...] = (L1_32K, L2_256K)):
+        self.levels = [_Level(c) for c in levels]
+        self.mem_reads = 0
+        self.mem_writes = 0
+
+    # -- probes ----------------------------------------------------------
+    def access(self, addr: int, is_write: bool) -> AccessResult:
+        line = addr // LINE
+        service_level = "MEM"
+        first_hit = False
+        mshr_merged = False
+        for i, lv in enumerate(self.levels):
+            if lv.lookup(line):
+                service_level = lv.cfg.name
+                first_hit = i == 0
+                break
+            mshr_merged = lv.mshr_probe(line) or mshr_merged
+        else:
+            self.mem_reads += 1                       # line fill from DRAM
+
+        # allocate the line in every level above the service point
+        for lv in self.levels:
+            if lv.cfg.name == service_level:
+                break
+            victim = lv.fill(line)
+            if victim is not None:
+                self._writeback(victim, below=lv.cfg.name)
+        if is_write:
+            self.levels[0].mark_dirty(line)
+
+        bank_level = self.levels[0] if service_level == "L1" else (
+            self.levels[1] if len(self.levels) > 1 and service_level == "L2"
+            else self.levels[-1])
+        return AccessResult(service_level, first_hit, bank_level.bank_of(addr),
+                            mshr_merged, line)
+
+    def _writeback(self, line: int, below: str) -> None:
+        """Victim from `below` written into the next level (or DRAM)."""
+        seen = False
+        for lv in self.levels:
+            if seen:
+                victim = lv.fill(line, dirty=True)
+                if victim is not None:
+                    self._writeback(victim, below=lv.cfg.name)
+                return
+            seen = lv.cfg.name == below
+        self.mem_writes += 1
+
+    # -- residency query used by offload selection ------------------------
+    def residency(self, addr: int) -> str:
+        line = addr // LINE
+        for lv in self.levels:
+            if line in lv.sets[line % lv.cfg.n_sets]:
+                return lv.cfg.name
+        return "MEM"
+
+    def bank_of(self, addr: int, level: str) -> int:
+        for lv in self.levels:
+            if lv.cfg.name == level:
+                return lv.bank_of(addr)
+        return 0
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        out = {}
+        for lv in self.levels:
+            out[lv.cfg.name] = {"hits": lv.hits, "misses": lv.misses,
+                                "writebacks": lv.writebacks,
+                                "size": lv.cfg.size, "assoc": lv.cfg.assoc}
+        out["MEM"] = {"reads": self.mem_reads, "writes": self.mem_writes}
+        return out

@@ -1,0 +1,231 @@
+"""HLO/jaxpr analysis — Eva-CiM's IDG offload analysis adapted to XLA.
+
+Two analyses (DESIGN.md §3):
+
+1. ``collective_bytes(hlo_text)`` — per-device bytes moved by each
+   collective kind, parsed from post-SPMD HLO (the §Roofline collective
+   term; ``cost_analysis`` does not expose it).
+
+2. ``fusion_candidates(jaxpr)`` — the paper's offload-candidate selection
+   re-targeted at the TPU memory wall: nodes are jaxpr equations, an
+   "offloading candidate" is a chain of elementwise/reduction ops whose
+   intermediate tensors can stay in VMEM (one HBM round-trip instead of
+   many) — i.e., what a fused Pallas kernel (kernels/) realizes.  The
+   TPU-MACR is the fraction of HBM traffic eliminable by such fusion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+# ======================================================================
+# 1. collective parsing (post-SPMD HLO text)
+# ======================================================================
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\))|(?:\S+))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of every typed shape in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = _DTYPE_BYTES.get(dt, 1 if dt.startswith("f8") else 4)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind, from result shapes."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        nbytes = shape_bytes(m.group(2))
+        out[kind] = out.get(kind, 0) + nbytes
+        out[kind + "_count"] = out.get(kind + "_count", 0) + 1
+    out["total"] = sum(v for k, v in out.items() if not k.endswith("_count"))
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> List[int]:
+    return [int(x) for x in re.findall(r"trip_count=(\d+)", hlo_text)]
+
+
+# ======================================================================
+# 2. jaxpr fusion-candidate analysis (the TPU IDG)
+# ======================================================================
+# op classes for the dataflow walk
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "and", "or", "xor", "not",
+    "neg", "abs", "exp", "log", "tanh", "logistic", "sqrt", "rsqrt",
+    "select_n", "clamp", "lt", "le", "gt", "ge", "eq", "ne", "sign",
+    "floor", "ceil", "round", "convert_element_type", "integer_pow",
+    "erf", "sin", "cos", "pow", "square", "cbrt", "is_finite", "rem",
+}
+_REDUCTION = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+              "argmax", "argmin", "reduce_and", "reduce_or", "cumsum",
+              "cummax", "cummin", "cumlogsumexp"}
+_MATMUL = {"dot_general", "conv_general_dilated"}
+_VIEW = {"reshape", "squeeze", "expand_dims", "broadcast_in_dim",
+         "transpose", "slice", "rev", "stop_gradient", "copy", "bitcast",
+         "convert_element_type"}
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0
+
+
+@dataclasses.dataclass
+class FusionCandidate:
+    """A chain of elementwise/reduction eqns whose intermediates stay in
+    VMEM when fused — the TPU analogue of one CiM offloading candidate."""
+    eqn_ids: List[int]
+    ops: List[str]
+    input_bytes: int                   # HBM reads the fused kernel still does
+    output_bytes: int                  # HBM writes it still does
+    saved_bytes: int                   # intermediate HBM round-trips removed
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.eqn_ids)
+
+
+@dataclasses.dataclass
+class FusionReport:
+    candidates: List[FusionCandidate]
+    total_bytes: int                   # all tensor traffic if nothing fuses
+    saved_bytes: int
+
+    @property
+    def tpu_macr(self) -> float:
+        """Fraction of HBM traffic eliminable by VMEM-resident fusion —
+        the TPU-mode MACR (DESIGN.md §3)."""
+        return self.saved_bytes / self.total_bytes if self.total_bytes else 0.0
+
+
+def fusion_candidates(jaxpr, min_bytes: int = 1 << 12) -> FusionReport:
+    """Walk a (closed) jaxpr's dataflow and greedily group connected
+    elementwise(+terminal reduction) eqns, exactly like Algorithm 1 walks
+    the IDG: chains rooted at a fusable op, leaves = HBM-resident tensors.
+
+    ``min_bytes``: tensors smaller than this are considered register/SMEM
+    resident (scalars, small params) and are not counted as traffic.
+    """
+    jx = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    eqns = list(jx.eqns)
+    # def/use maps over vars
+    producer: Dict[Any, int] = {}
+    consumers: Dict[Any, List[int]] = {}
+    def is_var(v) -> bool:
+        return type(v).__name__ not in ("Literal",)
+
+    for i, eqn in enumerate(eqns):
+        for v in eqn.outvars:
+            if is_var(v):
+                producer[v] = i
+        for v in eqn.invars:
+            if is_var(v) and hasattr(v, "aval"):
+                consumers.setdefault(v, []).append(i)
+
+    def klass(eqn) -> str:
+        n = eqn.primitive.name
+        if n in _MATMUL:
+            return "matmul"
+        if n in _REDUCTION:
+            return "reduction"
+        if n in _VIEW:
+            return "view"
+        if n in _ELEMENTWISE:
+            return "elementwise"
+        return "other"
+
+    total_bytes = 0
+    for eqn in eqns:
+        if klass(eqn) == "view":
+            continue
+        for v in list(eqn.invars) + list(eqn.outvars):
+            if hasattr(v, "aval"):
+                b = _aval_bytes(v.aval)
+                total_bytes += b if b >= min_bytes else 0
+
+    claimed: Set[int] = set()
+    cands: List[FusionCandidate] = []
+    # reverse walk: consumers first => maximal chains (same as offload.py)
+    for i in range(len(eqns) - 1, -1, -1):
+        if i in claimed or klass(eqns[i]) not in ("elementwise", "reduction"):
+            continue
+        group = []
+        stack = [i]
+        while stack:
+            j = stack.pop()
+            if j in claimed:
+                continue
+            kj = klass(eqns[j])
+            if kj not in ("elementwise", "reduction", "view"):
+                continue
+            claimed.add(j)
+            group.append(j)
+            for v in eqns[j].invars:
+                if not is_var(v):
+                    continue
+                p = producer.get(v)
+                if p is None or p in claimed:
+                    continue
+                # only fuse through single-consumer intermediates (XLA's
+                # duplication heuristic aside — conservative)
+                if len(consumers.get(v, ())) == 1 and \
+                        klass(eqns[p]) in ("elementwise", "view"):
+                    stack.append(p)
+        real = [j for j in group if klass(eqns[j]) != "view"]
+        if len(real) < 2:
+            for j in group:
+                claimed.discard(j)
+            continue
+        gset = set(group)
+        in_b = out_b = saved = 0
+        for j in group:
+            for v in eqns[j].invars:
+                if not is_var(v) or not hasattr(v, "aval"):
+                    continue
+                b = _aval_bytes(v.aval)
+                if b < min_bytes:
+                    continue
+                p = producer.get(v)
+                if p in gset:
+                    saved += 2 * b              # intermediate: store+load gone
+                else:
+                    in_b += b
+            for v in eqns[j].outvars:
+                if not is_var(v):
+                    continue
+                b = _aval_bytes(v.aval)
+                if b < min_bytes:
+                    continue
+                outside = [c for c in consumers.get(v, ()) if c not in gset]
+                if outside or producer.get(v) == group[-1]:
+                    out_b += b
+        cands.append(FusionCandidate(sorted(group),
+                                     [eqns[j].primitive.name for j in sorted(group)],
+                                     in_b, out_b, saved))
+    saved_total = sum(c.saved_bytes for c in cands)
+    return FusionReport(cands, total_bytes, saved_total)

@@ -1,0 +1,200 @@
+"""Instruction Dependency Graph — the paper's Algorithm 2 (Fig. 6).
+
+An IDG is a forest of *flipped trees*: the root of each tree is a
+CiM-supported OP instruction, edges point from an instruction to the
+instructions that produced its source operands, and leaves are loads or
+immediates.  Construction is O(N) because producers are found with two
+tables that the trace VM maintains while committing instructions:
+
+  RUT (register usage table)   reg -> [seq of instructions that wrote reg]
+  IHT (index hash table)       seq -> [(src reg, RUT position at commit)]
+
+``producer_of`` resolves one IHT entry to the defining instruction — the
+paper's "lookup RUT with [j]" (Algorithm 2 lines 11-12).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
+
+from repro.core.isa import SRC_IMM, SRC_REG, Inst, Trace
+
+# leaf kinds
+LEAF_LOAD = "load"            # Algorithm 2's LEAF_TRUE
+LEAF_IMM = "imm"              # Fig. 4(b) variant
+LEAF_MEMVAL = "memval"        # value produced by a non-CiM op, resident in
+                              # memory via its store (Fig. 4(c) boundary)
+
+
+@dataclasses.dataclass
+class IDGNode:
+    """One node of an IDG tree.  ``children`` holds (kind, payload) where
+    payload is an Inst for load leaves / op nodes, or the immediate value."""
+    inst: Inst
+    children: List[Tuple[str, object]] = dataclasses.field(default_factory=list)
+
+    @property
+    def left(self):          # the paper's binary view (Algorithm 2)
+        return self.children[0] if self.children else None
+
+    @property
+    def right(self):
+        return self.children[1] if len(self.children) > 1 else None
+
+    def iter_nodes(self) -> Iterator["IDGNode"]:
+        yield self
+        for kind, payload in self.children:
+            if kind == "node":
+                yield from payload.iter_nodes()
+
+    def load_leaves(self) -> List[Inst]:
+        out = []
+        for kind, payload in self.children:
+            if kind == LEAF_LOAD:
+                out.append(payload)
+            elif kind == "node":
+                out.extend(payload.load_leaves())
+        return out
+
+    def size_ops(self) -> int:
+        return sum(1 for _ in self.iter_nodes())
+
+
+class IDGBuilder:
+    """Resolves producers over (trace, RUT, IHT) and builds trees."""
+
+    def __init__(self, trace: Trace, rut: Dict[int, List[int]],
+                 iht: Dict[int, List[Tuple[int, int]]]):
+        self.trace = trace
+        self.rut = rut
+        self.iht = iht
+
+    # ------------------------------------------------------------ lookups
+    def producer_of(self, seq: int, src_slot: int) -> Optional[Inst]:
+        """Defining instruction of the ``src_slot``-th *register* source."""
+        entries = self.iht.get(seq, ())
+        if src_slot >= len(entries):
+            return None
+        reg, pos = entries[src_slot]
+        writes = self.rut.get(reg, ())
+        if 0 <= pos < len(writes):
+            return self.trace[writes[pos]]
+        return None
+
+    def producers(self, inst: Inst) -> List[Tuple[str, object]]:
+        """All source operands of ``inst`` resolved to (kind, payload).
+
+        kind: "imm" for immediates, "inst" for register operands (payload =
+        producing Inst), "unknown" when the register has no recorded writer
+        (pre-existing machine state).
+        """
+        out: List[Tuple[str, object]] = []
+        reg_slot = 0
+        for tag, val in inst.srcs:
+            if tag == SRC_IMM:
+                out.append(("imm", val))
+            else:
+                p = self.producer_of(inst.seq, reg_slot)
+                reg_slot += 1
+                out.append(("inst", p) if p is not None else ("unknown", val))
+        return out
+
+    # ------------------------------------------------------- tree building
+    def create_tree(self, root: Inst, cim_set: FrozenSet[str],
+                    claimed: Optional[set] = None,
+                    max_ops: int = 64) -> Optional[IDGNode]:
+        """Algorithm 2's create_tree: recursive producer expansion.
+
+        Recurses through CiM-supported producers (composite patterns),
+        terminates at load leaves / immediates, and cuts at non-CiM
+        producers (their value is memory-resident via its store ->
+        LEAF_MEMVAL).  ``claimed`` marks instructions already owned by an
+        accepted candidate — the partition step's bookkeeping.
+        """
+        if root.op not in cim_set:
+            return None
+        budget = [max_ops]
+
+        def build(inst: Inst) -> Optional[IDGNode]:
+            if budget[0] <= 0:
+                return None
+            budget[0] -= 1
+            node = IDGNode(inst)
+            for kind, payload in self.producers(inst):
+                if kind == "imm":
+                    node.children.append((LEAF_IMM, payload))
+                elif kind == "unknown":
+                    node.children.append((LEAF_IMM, payload))
+                else:
+                    p: Inst = payload
+                    if p.is_load:
+                        node.children.append((LEAF_LOAD, p))
+                    elif p.op == "mov" and all(t == SRC_IMM for t, _ in p.srcs):
+                        # accumulator init (mov #imm): an immediate leaf
+                        node.children.append((LEAF_IMM, p.srcs[0][1]))
+                    elif (p.op in cim_set
+                          and (claimed is None or p.seq not in claimed)):
+                        sub = build(p)
+                        if sub is None:
+                            node.children.append((LEAF_MEMVAL, p))
+                        else:
+                            node.children.append(("node", sub))
+                    else:
+                        node.children.append((LEAF_MEMVAL, p))
+            return node
+
+        return build(root)
+
+    def build_forest(self, cim_set: FrozenSet[str],
+                     max_ops: int = 64) -> List[IDGNode]:
+        """Algorithm 2's outer loop: one tree per CiM-supported instruction.
+
+        (Offload selection uses a claimed-set variant instead so composite
+        candidates are extracted exactly once — see core/offload.py.)
+        """
+        forest = []
+        for inst in self.trace:
+            if inst.op in cim_set:
+                tree = self.create_tree(inst, cim_set, max_ops=max_ops)
+                if tree is not None:
+                    forest.append(tree)
+        return forest
+
+
+# ======================================================================
+# Auxiliary producer/consumer indices used by selection + reshaping
+# ======================================================================
+@dataclasses.dataclass
+class FlowIndex:
+    """Derived O(N) maps over a trace (built once, reused by the analysis)."""
+    reg_consumers: Dict[int, List[int]]     # producer seq -> consumer seqs
+    store_of: Dict[int, List[int]]          # op seq -> seqs of stores of its value
+    load_source: Dict[int, Optional[int]]   # load seq -> producing op seq (via mem)
+    value_loads: Dict[int, List[int]]       # producing op seq -> later load seqs
+
+
+def build_flow_index(trace: Trace, rut, iht) -> FlowIndex:
+    b = IDGBuilder(trace, rut, iht)
+    reg_consumers: Dict[int, List[int]] = {}
+    store_of: Dict[int, List[int]] = {}
+    load_source: Dict[int, Optional[int]] = {}
+    value_loads: Dict[int, List[int]] = {}
+    last_writer_of_addr: Dict[int, int] = {}      # addr -> producing op seq
+
+    for inst in trace:
+        for kind, payload in b.producers(inst):
+            if kind == "inst":
+                p: Inst = payload
+                reg_consumers.setdefault(p.seq, []).append(inst.seq)
+                if inst.is_store:
+                    store_of.setdefault(p.seq, []).append(inst.seq)
+        if inst.is_store:
+            prods = [p.seq for k, p in b.producers(inst) if k == "inst"]
+            if prods:
+                last_writer_of_addr[inst.addr] = prods[0]
+        elif inst.is_load:
+            src = last_writer_of_addr.get(inst.addr)
+            load_source[inst.seq] = src
+            if src is not None:
+                value_loads.setdefault(src, []).append(inst.seq)
+    return FlowIndex(reg_consumers, store_of, load_source, value_loads)

@@ -1,0 +1,260 @@
+"""Offloading-candidate selection — the paper's Algorithm 1.
+
+Walks the CIQ in reverse order (outermost consumers first, so composite
+patterns are extracted maximally), builds the IDG tree under each
+CiM-supported root (Algorithm 2 via :mod:`repro.core.idg`), then applies
+the paper's §IV-A/§IV-B constraints:
+
+  * every op node's operation must be in the CiM-supported set;
+  * leaves are loads, immediates, or memory-resident values;
+  * at least one operand must actually come from memory;
+  * the operands must co-reside at one CiM-capable cache level — operands
+    at a *shallower* level can be written back to the offload level
+    (§IV-C's reshaping rule, priced as `moves`), operands at a *deeper*
+    level than any CiM-capable cache make the candidate infeasible there.
+
+Dependent candidates from the same IDG tree (the output of one subtree
+feeding another, Fig. 5c) are merged through memory: the connecting
+load+store pair is elided and counted as an in-bank move (`internal_edges`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.core.idg import (LEAF_IMM, LEAF_LOAD, LEAF_MEMVAL, FlowIndex,
+                            IDGBuilder, IDGNode, build_flow_index)
+from repro.core.isa import CIM_OP_CLASS, CIM_SET_STT, Inst, Trace
+
+_LEVEL_DEPTH = {"L1": 0, "L2": 1, "MEM": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    cim_set: FrozenSet[str] = CIM_SET_STT
+    cim_levels: Tuple[str, ...] = ("L1", "L2")   # CiM-capable cache levels
+    require_same_bank: bool = False   # off: assume [18]/[20]-style operand-
+                                      # locality support (address translation)
+    allow_cross_level: bool = True    # §IV-C writeback of shallower operands
+    min_mem_operands: int = 1
+    # the paper's IDG leaf rule: "the leaf node needs to be either a load
+    # instruction or an immediate value" — at least one true load leaf,
+    # otherwise offloading saves nothing (it would only add re-loads)
+    min_load_leaves: int = 1
+    max_tree_ops: int = 64
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One accepted offloading candidate (a subtree of one IDG tree)."""
+    root_seq: int
+    op_seqs: List[int]                 # CiM-executed op nodes (root included)
+    op_classes: List[str]              # Table III pricing class per op node
+    load_seqs: List[int]               # converted (removed) host loads
+    store_seqs: List[int]              # stores absorbed into CiM writes
+    level: str                         # offload level
+    bank: Optional[int]
+    moves: int                         # operands written back to `level`
+    internal_edges: int                # merged same-tree subtree links
+    added_loads: int                   # outside reg-consumers now load from mem
+    memval_leaves: int
+    dram_fills: int = 0                # leaves/stores whose line sat in DRAM —
+                                       # the fill happens in BOTH scenarios
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.op_seqs)
+
+    @property
+    def converted_accesses(self) -> int:
+        return len(self.load_seqs) + len(self.store_seqs)
+
+
+@dataclasses.dataclass
+class OffloadResult:
+    candidates: List[Candidate]
+    claimed: Set[int]                  # all removed host instruction seqs
+    flow: FlowIndex
+    config: OffloadConfig
+
+    # ------------------------------------------------------------ metrics
+    def macr(self, trace: Trace) -> float:
+        """Memory-access conversion ratio (the paper's §VI-C metric)."""
+        total = sum(1 for i in trace if i.is_mem)
+        if total == 0:
+            return 0.0
+        converted = sum(c.converted_accesses for c in self.candidates)
+        return converted / total
+
+    def macr_breakdown(self, trace: Trace) -> Dict[str, float]:
+        """Fig. 13: converted accesses split into L1 / other levels."""
+        total = max(1, sum(1 for i in trace if i.is_mem))
+        l1 = other = 0
+        for c in self.candidates:
+            for s in c.load_seqs + c.store_seqs:
+                if trace[s].level == "L1":
+                    l1 += 1
+                else:
+                    other += 1
+        return {"macr": (l1 + other) / total, "l1": l1 / total,
+                "other": other / total,
+                "total_accesses": total, "converted": l1 + other}
+
+
+def _leaf_levels(node: IDGNode, flow: FlowIndex, trace: Trace
+                 ) -> Optional[List[Tuple[str, Optional[int], str, int]]]:
+    """(kind, seq, level, bank) per memory-resident operand of a subtree."""
+    out = []
+    for kind, payload in node.children:
+        if kind == LEAF_LOAD:
+            inst: Inst = payload
+            out.append((LEAF_LOAD, inst.seq, inst.level, inst.bank))
+        elif kind == LEAF_MEMVAL:
+            inst: Inst = payload
+            stores = flow.store_of.get(inst.seq, [])
+            if not stores:
+                return None                      # value never reached memory
+            st = trace[stores[-1]]
+            out.append((LEAF_MEMVAL, inst.seq, st.level, st.bank))
+        elif kind == "node":
+            sub = _leaf_levels(payload, flow, trace)
+            if sub is None:
+                return None
+            out.extend(sub)
+    return out
+
+
+def _try_accept(node: IDGNode, flow: FlowIndex, trace: Trace,
+                cfg: OffloadConfig, claimed: Set[int]) -> Optional[Candidate]:
+    ops = list(node.iter_nodes())
+    if any(n.inst.seq in claimed for n in ops):
+        return None
+    leaves = _leaf_levels(node, flow, trace)
+    if leaves is None:
+        return None
+    mem_leaves = [l for l in leaves if l[0] in (LEAF_LOAD, LEAF_MEMVAL)]
+    if len(mem_leaves) < cfg.min_mem_operands:
+        return None
+    if sum(1 for l in leaves if l[0] == LEAF_LOAD) < cfg.min_load_leaves:
+        return None
+
+    # ---- locality: pick the offload level (deepest leaf level among
+    # CiM-capable levels); deeper-than-capable leaves are infeasible.
+    depth_cap = max(_LEVEL_DEPTH[l] for l in cfg.cim_levels)
+    max_depth = 0
+    for _, _, level, _ in mem_leaves:
+        d = _LEVEL_DEPTH.get(level, 2)
+        if d > depth_cap:
+            # data currently in DRAM (or below any CiM cache): the fill
+            # happens in both scenarios — offload at the deepest CiM level.
+            d = depth_cap
+        max_depth = max(max_depth, d)
+    # lift to the shallowest *enabled* level >= max_depth
+    enabled_depths = sorted(_LEVEL_DEPTH[l] for l in cfg.cim_levels)
+    target_depth = next((d for d in enabled_depths if d >= max_depth),
+                        enabled_depths[-1])
+    level = {v: k for k, v in _LEVEL_DEPTH.items()}[target_depth]
+    moves = sum(1 for _, _, lv, _ in mem_leaves
+                if _LEVEL_DEPTH.get(lv, 2) < target_depth)
+    if moves and not cfg.allow_cross_level:
+        return None
+
+    if cfg.require_same_bank:
+        banks = {b for _, _, lv, b in mem_leaves if lv == level}
+        if len(banks) > 1:
+            return None
+
+    # ---- gather the removal set --------------------------------------
+    op_seqs = [n.inst.seq for n in ops]
+    op_set = set(op_seqs)
+    # loads/stores already claimed by an earlier candidate are shared
+    # operands (the value is already array-resident) — never count twice
+    load_seqs = sorted({s for k, s, _, _ in leaves if k == LEAF_LOAD}
+                       - claimed)
+    internal = 0
+    # dependent-subtree merge: converted loads whose value was produced by
+    # an op we also offload become in-bank moves (Fig. 5c)
+    for s in load_seqs:
+        src = flow.load_source.get(s)
+        if src is not None and src in op_set:
+            internal += 1
+    store_set: Set[int] = set()
+    added_loads = 0
+    root_seq = node.inst.seq
+    for p in op_seqs:
+        store_set.update(s for s in flow.store_of.get(p, ())
+                         if s not in claimed)
+        if p == root_seq:
+            # the CiM macro-instruction is read-class ([23]): the root's
+            # result returns to the host destination register like a load
+            # result — its register consumers need no re-load
+            continue
+        for consumer in flow.reg_consumers.get(p, ()):  # outside reg readers
+            # consumers claimed by *other* candidates read the value in the
+            # array (selection runs in reverse order, so later consumers are
+            # already resolved); only surviving host ops re-load it
+            if (consumer not in op_set and consumer not in claimed
+                    and not trace[consumer].is_store):
+                added_loads += 1
+    store_seqs = sorted(store_set)
+    bank = trace[load_seqs[0]].bank if load_seqs else None
+    # DRAM fills kept in both scenarios: one per unique line this candidate
+    # touches whose access was served by main memory.
+    fill_lines = {trace[s].addr // 64 for s in load_seqs
+                  if trace[s].level == "MEM"}
+    fill_lines |= {trace[s].addr // 64 for s in store_seqs
+                   if trace[s].level == "MEM"}
+    dram_fills = len(fill_lines)
+    return Candidate(
+        root_seq=node.inst.seq,
+        op_seqs=op_seqs,
+        op_classes=[CIM_OP_CLASS.get(trace[s].op, "CiM-ADD") for s in op_seqs],
+        load_seqs=load_seqs,
+        store_seqs=store_seqs,
+        level=level,
+        bank=bank,
+        moves=moves,
+        internal_edges=internal,
+        added_loads=added_loads,
+        memval_leaves=sum(1 for k, *_ in leaves if k == LEAF_MEMVAL),
+        dram_fills=dram_fills,
+    )
+
+
+def select_candidates(trace: Trace, rut, iht,
+                      cfg: OffloadConfig = OffloadConfig(),
+                      flow: Optional[FlowIndex] = None) -> OffloadResult:
+    """Algorithm 1: build tables -> build IDG trees -> partition/extract."""
+    builder = IDGBuilder(trace, rut, iht)
+    flow = flow or build_flow_index(trace, rut, iht)
+    claimed: Set[int] = set()
+    candidates: List[Candidate] = []
+
+    # reverse order: outermost roots first => maximal composite extraction
+    for seq in range(len(trace) - 1, -1, -1):
+        inst = trace[seq]
+        if inst.op not in cfg.cim_set or seq in claimed:
+            continue
+        tree = builder.create_tree(inst, cfg.cim_set, claimed=claimed,
+                                   max_ops=cfg.max_tree_ops)
+        if tree is None:
+            continue
+        cand = _try_accept(tree, flow, trace, cfg, claimed)
+        if cand is None:
+            # Fig. 5: the whole tree failed — try its child subtrees
+            for kind, payload in tree.children:
+                if kind == "node":
+                    sub = _try_accept(payload, flow, trace, cfg, claimed)
+                    if sub is not None:
+                        candidates.append(sub)
+                        claimed.update(sub.op_seqs)
+                        claimed.update(sub.load_seqs)
+                        claimed.update(sub.store_seqs)
+            continue
+        candidates.append(cand)
+        claimed.update(cand.op_seqs)
+        claimed.update(cand.load_seqs)
+        claimed.update(cand.store_seqs)
+
+    candidates.reverse()                     # report in program order
+    return OffloadResult(candidates, claimed, flow, cfg)

@@ -1,0 +1,105 @@
+"""TPU hardware model — the device/array model of Eva-CiM's TPU mode.
+
+The paper prices an ARM host + SRAM/FeFET CiM caches; the TPU-native
+adaptation (DESIGN.md §3) prices a v5e pod: MXU compute, HBM<->VMEM
+traffic, and ICI collectives.  The same three questions (how much does the
+workload benefit / which memory level / which technology) become the three
+roofline terms the dry-run derives per (arch x shape x mesh) cell.
+
+Hardware constants are the assignment's: 197 bf16 TFLOP/s per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.  Energy constants are public-literature
+estimates used only for the Eva-CiM-style energy report (not the roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuChip:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12          # FLOP/s per chip
+    hbm_bw: float = 819e9                    # B/s per chip
+    ici_bw: float = 50e9                     # B/s per link (assignment value)
+    hbm_bytes: float = 16e9                  # capacity per chip
+    vmem_bytes: float = 128e6                # ~128 MB VMEM (v5e ~128MiB class)
+    # energy (pJ) — literature-class estimates for the energy report
+    pj_per_flop: float = 0.25                # MXU bf16 MAC amortized
+    pj_per_hbm_byte: float = 8.0
+    pj_per_ici_byte: float = 3.0
+    pj_per_vmem_byte: float = 0.25
+
+
+V5E = TpuChip()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three §Roofline terms, in seconds, for one compiled cell."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time: the dominant term (no overlap assumed
+        between the sub-dominant ones and it — they hide behind it)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """dominant / sum — 1.0 means perfectly limited by one resource
+        (nothing wasted waiting on the others if perfectly overlapped)."""
+        s = self.compute_s + self.memory_s + self.collective_s
+        return self.bound_s / s if s > 0 else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "roofline_fraction": round(self.roofline_fraction, 4),
+        }
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, n_devices: int,
+                   chip: TpuChip = V5E) -> RooflineTerms:
+    """The assignment's three-term model:
+
+        compute    = HLO_FLOPs / peak_FLOP/s         (per device)
+        memory     = HLO_bytes / HBM_bw              (per device)
+        collective = collective_bytes / link_bw      (per device)
+    """
+    return RooflineTerms(
+        compute_s=max(flops_per_device, 0.0) / chip.peak_flops_bf16,
+        memory_s=max(bytes_per_device, 0.0) / chip.hbm_bw,
+        collective_s=max(collective_bytes_per_device, 0.0) / chip.ici_bw,
+        n_devices=n_devices,
+    )
+
+
+def step_energy_pj(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, n_devices: int,
+                   chip: TpuChip = V5E) -> Dict[str, float]:
+    """Eva-CiM-style whole-system energy estimate for one step (all chips)."""
+    compute = flops_per_device * chip.pj_per_flop * n_devices
+    hbm = bytes_per_device * chip.pj_per_hbm_byte * n_devices
+    ici = collective_bytes_per_device * chip.pj_per_ici_byte * n_devices
+    return {"compute_pj": compute, "hbm_pj": hbm, "ici_pj": ici,
+            "total_pj": compute + hbm + ici}
+
+
+def model_flops(param_count: int, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D for
+    inference — the §Roofline 'useful compute' yardstick."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * float(param_count) * float(tokens)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, ShardedTokenPipeline,
+                                 write_synthetic_corpus)

@@ -1,0 +1,1 @@
+from repro.ft.manager import FaultTolerantRunner, StragglerMonitor

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels — the realized "CiM modules" of the TPU adaptation.
+
+Each kernel keeps its operands VMEM-resident for the whole computation —
+one HBM round-trip instead of one per op — which is the TPU-native form of
+the paper's in-memory offloading (DESIGN.md S3):
+
+  cim_bitwise      bulk AND/OR/XOR/ADD (Table III's op set; compute-caches
+                   [20] / Pinatubo [22] style row-parallel ops)
+  flash_attention  softmax(QK^T)V computed where the KV block lives
+  mlstm_chunk      xLSTM matrix-memory recurrence, state never leaves VMEM
+
+``ops.py`` holds the jit'd public wrappers; ``ref.py`` the pure-jnp
+oracles every kernel is validated against (interpret=True on CPU).
+"""

@@ -1,0 +1,111 @@
+"""Flash attention Pallas kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Grid = (batch*kv_heads*groups, num_q_blocks, num_kv_blocks); the last grid
+dimension iterates sequentially on TPU, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and is revised as KV blocks stream
+through — softmax(QK^T)V computed where the KV lives, never materializing
+the (Sq, Skv) score matrix.  Causal + sliding-window masking via
+program-id arithmetic; block shapes default to MXU-aligned (128, head_dim).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(causal: bool, window: int, sm_scale: float, block_q: int,
+                  block_k: int, num_kv_blocks: int,
+                  q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, d); k, v: (B, Hkv, Skv, d); GQA via H % Hkv == 0.
+    Sq/Skv must tile by block_q/block_k (ops.py pads)."""
+    B, H, Sq, d = q.shape
+    Bk, Hkv, Skv, dk = k.shape
+    assert (B, d) == (Bk, dk) and H % Hkv == 0
+    G = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    nq, nk = Sq // bq, Skv // bk
+    sm_scale = 1.0 / math.sqrt(d)
+
+    qr = q.reshape(B * H, Sq, d)
+    kr = jnp.repeat(k, G, axis=1).reshape(B * H, Skv, d)
+    vr = jnp.repeat(v, G, axis=1).reshape(B * H, Skv, d)
+
+    kernel = functools.partial(_flash_kernel, causal, window, sm_scale,
+                               bq, bk, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),            # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),            # running sum l
+            pltpu.VMEM((bq, d), jnp.float32),            # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, d)

@@ -1,0 +1,118 @@
+"""Chunkwise mLSTM Pallas kernel — the xLSTM matrix-memory recurrence with
+the (dh x dh) state held in VMEM scratch across the whole sequence.
+
+Grid = (batch*heads, num_chunks); the chunk dimension iterates sequentially
+on TPU so the stabilized state (C, n, m) persists in scratch between grid
+steps — the state never round-trips HBM, which is the recurrent analogue of
+the CiM offload (DESIGN.md §3).  Math matches ``repro.models.ssm``'s
+stabilized chunkwise form exactly (ref.py delegates to it).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_CHUNK = 128
+
+
+def _mlstm_kernel(chunk: int, dh: int,
+                  q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                  C_ref, n_ref, m_ref):
+    ci = pl.program_id(1)
+    K = chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)                     # (K, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)[:, 0]             # (K,)
+    lf = lf_ref[0].astype(jnp.float32)[:, 0]
+
+    b = jnp.cumsum(lf)                                   # inclusive decay
+    g = li - b                                           # log source weight
+    m_prev = m_ref[0, 0]
+    m_intra = jax.lax.cummax(g) + b
+    m_inter = m_prev + b
+    m_t = jnp.maximum(m_intra, m_inter)                  # (K,)
+
+    logD = b[:, None] + g[None, :] - m_t[:, None]        # (K, K)
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+    D = jnp.where(t_pos >= j_pos, jnp.exp(logD), 0.0)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    w = s * D
+    num = jnp.dot(w, v, preferred_element_type=jnp.float32)
+    den = jnp.sum(w, axis=-1)
+
+    inter_w = jnp.exp(m_inter - m_t)                     # (K,)
+    num = num + inter_w[:, None] * jnp.dot(q * scale, C_ref[...],
+                                           preferred_element_type=jnp.float32)
+    den = den + inter_w * jnp.dot(q * scale, n_ref[...][:, 0],
+                                  preferred_element_type=jnp.float32)
+
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[:, None]
+    o_ref[0] = h.astype(o_ref.dtype)
+
+    # ---- state update to chunk end -----------------------------------
+    Ftot = b[K - 1]
+    m_next = jnp.maximum(m_prev + Ftot, Ftot + jnp.max(g))
+    w_prev = jnp.exp(m_prev + Ftot - m_next)
+    w_src = jnp.exp(Ftot + g - m_next)                   # (K,)
+    C_ref[...] = w_prev * C_ref[...] + jnp.dot(
+        (k * w_src[:, None]).T, v, preferred_element_type=jnp.float32)
+    n_ref[...] = w_prev * n_ref[...] + jnp.sum(
+        k * w_src[:, None], axis=0)[:, None]
+    m_ref[0, 0] = m_next
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                    i_raw: jax.Array, f_raw: jax.Array, *,
+                    chunk: int = DEFAULT_CHUNK,
+                    interpret: bool = False) -> jax.Array:
+    """q/k/v: (B, H, S, dh); i_raw/f_raw: (B, H, S) raw gate pre-activations.
+    Returns the hidden sequence (B, H, S, dh).  S must tile by ``chunk``."""
+    B, H, S, dh = q.shape
+    K = min(chunk, S)
+    assert S % K == 0, (S, K)
+    nc = S // K
+    li = i_raw.astype(jnp.float32)                        # log input gate
+    lf = -jax.nn.softplus(-f_raw.astype(jnp.float32))     # log sigmoid forget
+
+    def flat(x):
+        return x.reshape(B * H, S, *x.shape[3:])
+
+    qr, kr, vr = flat(q), flat(k), flat(v)
+    lir = li.reshape(B * H, S, 1)
+    lfr = lf.reshape(B * H, S, 1)
+
+    kernel = functools.partial(_mlstm_kernel, K, dh)
+    seq_spec = pl.BlockSpec((1, K, dh), lambda b, c: (b, c, 0))
+    gate_spec = pl.BlockSpec((1, K, 1), lambda b, c: (b, c, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[seq_spec, seq_spec, seq_spec, gate_spec, gate_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),            # C state
+            pltpu.VMEM((dh, 1), jnp.float32),             # n state
+            pltpu.VMEM((1, 1), jnp.float32),              # m stabilizer
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, lir, lfr)
+    return out.reshape(B, H, S, dh)

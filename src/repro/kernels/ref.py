@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel ground truth).
+
+Each ``*_ref`` computes the same function as its kernel with plain jnp —
+no blocking, no online softmax — so allclose against these validates both
+the tiling and the numerics.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_OPS = {
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+}
+
+
+def cim_bitwise_ref(x, y, *, op: str = "and"):
+    return _OPS[op](x, y)
+
+
+def cim_bitwise_fused_ref(x, y, z, *, op1: str = "add", op2: str = "xor"):
+    return _OPS[op2](_OPS[op1](x, y), z)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,Sq,d); k/v: (B,Hkv,Skv,d). Dense softmax reference."""
+    B, H, Sq, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / math.sqrt(d)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def mlstm_chunkwise_ref(q, k, v, i_raw, f_raw):
+    """Sequential stabilized mLSTM recurrence (token-by-token oracle).
+
+    q/k/v: (B, H, S, dh); gates: (B, H, S).  Matches the kernel's chunkwise
+    math in exact arithmetic (the chunked form is algebraically identical).
+    """
+    B, H, S, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    li = i_raw.astype(jnp.float32)
+    lf = -jax.nn.softplus(-f_raw.astype(jnp.float32))
+
+    def step(state, xs):
+        C, n, m = state
+        qt, kt, vt, lit, lft = xs                         # (B,H,dh) / (B,H)
+        m_new = jnp.maximum(lft + m, lit)
+        fw = jnp.exp(lft + m - m_new)
+        iw = jnp.exp(lit - m_new)
+        C = fw[..., None, None] * C + iw[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fw[..., None] * n + iw[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt * scale, C)
+        den = jnp.einsum("bhd,bhd->bh", qt * scale, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    qf = jnp.moveaxis(q.astype(jnp.float32), 2, 0)
+    kf = jnp.moveaxis(k.astype(jnp.float32), 2, 0)
+    vf = jnp.moveaxis(v.astype(jnp.float32), 2, 0)
+    lif = jnp.moveaxis(li, 2, 0)
+    lff = jnp.moveaxis(lf, 2, 0)
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0, m0), (qf, kf, vf, lif, lff))
+    return jnp.moveaxis(hs, 0, 2).astype(q.dtype)         # (B,H,S,dh)

@@ -1,0 +1,118 @@
+"""Cell construction: one (arch x shape x mesh) dry-run/lowering unit.
+
+A *cell* bundles the step function, abstract input shapes, and the
+in/out shardings needed to ``jit(...).lower().compile()`` it — used by the
+dry-run, the roofline harness, and the perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES, cell_status
+from repro.dist import sharding as shd
+from repro.models import inputs as minputs
+from repro.models.transformer import init_cache, init_params
+from repro.train import steps as steps_mod
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    rules: Dict[str, Any]
+    fn: Callable
+    in_specs: Tuple[Any, ...]          # abstract args (ShapeDtypeStruct trees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+
+    def lower(self):
+        with self.mesh, shd.use_rules(self.mesh, self.rules):
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings)
+            return jitted.lower(*self.in_specs)
+
+
+def _replicated(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state_shape, zero1: bool = True,
+                    strategy: str = "auto"):
+    pspecs = shd.param_specs(cfg, mesh, state_shape["params"], strategy=strategy)
+    ospecs = (shd.opt_state_specs(cfg, mesh, state_shape["params"], pspecs,
+                                  strategy=strategy)
+              if zero1 else pspecs)
+    out = {
+        "params": shd.named(mesh, pspecs),
+        "opt": {"m": shd.named(mesh, ospecs), "v": shd.named(mesh, ospecs)},
+        "step": NamedSharding(mesh, P()),
+    }
+    if "error_fb" in state_shape:
+        out["error_fb"] = shd.named(mesh, ospecs)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               tc: Optional[TrainConfig] = None,
+               strategy: str = "auto") -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    status = cell_status(cfg, shape)
+    if status != "run":
+        raise ValueError(f"cell {arch}x{shape_name} is {status}")
+    tc = tc or TrainConfig()
+    rules = shd.make_rules(cfg, mesh, shape, strategy=strategy)
+    rng = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        state_shape = jax.eval_shape(lambda r: steps_mod.init_train_state(r, cfg), rng)
+        st_sh = state_shardings(cfg, mesh, state_shape, zero1=tc.zero1,
+                                strategy=strategy)
+        batch_spec = minputs.train_input_specs(cfg, shape)
+        batch_sh = shd.batch_input_shardings(mesh, batch_spec, rules)
+        fn = steps_mod.make_train_step(cfg, tc)
+        metrics_shape = {"loss": jax.ShapeDtypeStruct((), jnp.float32),
+                         "aux_loss": jax.ShapeDtypeStruct((), jnp.float32),
+                         "grad_norm": jax.ShapeDtypeStruct((), jnp.float32),
+                         "lr": jax.ShapeDtypeStruct((), jnp.float32)}
+        return Cell(cfg, shape, mesh, rules, fn,
+                    in_specs=(state_shape, batch_spec),
+                    in_shardings=(st_sh, batch_sh),
+                    out_shardings=(st_sh, _replicated(mesh, metrics_shape)))
+
+    params_shape = jax.eval_shape(lambda r: init_params(r, cfg), rng)
+    pspecs = shd.param_specs(cfg, mesh, params_shape, strategy=strategy)
+    p_sh = shd.named(mesh, pspecs)
+
+    if shape.kind == "prefill":
+        batch_spec = minputs.prefill_input_specs(cfg, shape)
+        batch_sh = shd.batch_input_shardings(mesh, batch_spec, rules)
+        fn = steps_mod.make_prefill_step(cfg, cache_len=shape.seq_len)
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_sh = shd.named(mesh, shd.cache_specs(cfg, mesh, cache_shape, rules))
+        tok_sh = NamedSharding(mesh, P(rules.get("batch")) if rules.get("batch") else P())
+        return Cell(cfg, shape, mesh, rules, fn,
+                    in_specs=(params_shape, batch_spec),
+                    in_shardings=(p_sh, batch_sh),
+                    out_shardings=(tok_sh, cache_sh))
+
+    # decode
+    dec = minputs.decode_input_specs(cfg, shape)
+    cache_sh = shd.named(mesh, shd.cache_specs(cfg, mesh, dec["cache"], rules))
+    b = rules.get("batch")
+    tok_sh = NamedSharding(mesh, P(b) if b else P())
+    fn = steps_mod.make_decode_step(cfg)
+    return Cell(cfg, shape, mesh, rules, fn,
+                in_specs=(params_shape, dec["token"], dec["cache"], dec["cur_pos"]),
+                in_shardings=(p_sh, tok_sh, cache_sh, NamedSharding(mesh, P())),
+                out_shardings=(tok_sh, cache_sh))

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init). Produces one JSON artifact per cell under
+``benchmarks/artifacts/dryrun/<mesh>/`` with memory_analysis,
+cost_analysis, and the parsed collective-byte breakdown used by
+EXPERIMENTS.md §Dry-run and §Roofline. Resumable: existing artifacts are
+skipped unless ``--force``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single            # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --arch yi-34b --shape train_4k
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCHS, get_config
+from repro.configs.shapes import ALL_SHAPES, cell_status
+from repro.core.hlo import collective_bytes, scan_trip_counts
+from repro.core.hlo_cost import analyze_hlo
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             strategy: str = "auto", tc=None) -> dict:
+    outdir = ART / mesh_kind
+    outdir.mkdir(parents=True, exist_ok=True)
+    suffix = "" if strategy == "auto" and tc is None else f"__{strategy}"
+    path = outdir / f"{arch}__{shape_name}{suffix}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    cfg = get_config(arch)
+    shape = [s for s in ALL_SHAPES if s.name == shape_name][0]
+    status = cell_status(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "status": status,
+        "strategy": strategy,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    if status != "run":
+        path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, tc=tc, strategy=strategy)
+        lowered = cell.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        scaled = analyze_hlo(hlo)      # trip-count-aware (cost_analysis
+                                       # counts scan bodies once)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            flops_per_device=float(ca.get("flops", -1.0)),
+            bytes_accessed_per_device=float(ca.get("bytes accessed", -1.0)),
+            transcendentals=float(ca.get("transcendentals", -1.0)),
+            memory={
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            },
+            collectives=collective_bytes(hlo),
+            flops_scaled_per_device=scaled.flops,
+            bytes_scaled_per_device=scaled.bytes,
+            collectives_scaled={k: v for k, v in scaled.collectives.items()},
+            collective_scaled_total=scaled.collective_total,
+            while_trip_counts=scan_trip_counts(hlo)[:64],
+            n_devices=mesh.devices.size,
+        )
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+              f"flops/dev {rec['flops_per_device']:.3e})", flush=True)
+        print(f"  memory_analysis: {ma}", flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   tb=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: FAIL {type(e).__name__}: {e}",
+              flush=True)
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="default: all 10")
+    ap.add_argument("--shape", default=None, help="default: all shapes")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="auto", choices=["auto", "dp", "sp"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, mk, force=args.force,
+                               strategy=args.strategy)
+                if rec["status"] != "run":
+                    n_skip += 1
+                elif rec.get("ok"):
+                    n_ok += 1
+                else:
+                    n_fail += 1
+    print(f"[dryrun] done: ok={n_ok} fail={n_fail} skip={n_skip}", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

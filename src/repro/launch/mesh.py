@@ -1,0 +1,20 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,2 @@
+from repro.models.transformer import (forward_decode, forward_full, init_cache,
+                                      init_params, lm_loss)

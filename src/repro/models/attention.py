@@ -1,0 +1,331 @@
+"""GQA attention: chunked-flash train/prefill, cached decode, cross-attn.
+
+The train/prefill path is a pure-jnp *chunked online-softmax* (flash)
+implementation: it never materializes the (Sq, Skv) score matrix, so the
+lowered HLO has the same HBM-traffic shape as the Pallas kernel in
+``repro.kernels.flash_attention`` (which is the TPU deployment path).
+This is the "compute where the KV lives" CiM analogue — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import apply_rope, dense_init, pdtype_of
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- params
+def make_attn_params(rng, cfg: ModelConfig, cross: bool = False):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = pdtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(k1, (d, h, dh), dt, fan_in=d),
+        "wk": dense_init(k2, (d, hk, dh), dt, fan_in=d),
+        "wv": dense_init(k3, (d, hk, dh), dt, fan_in=d),
+        "wo": dense_init(k4, (h, dh, d), dt, fan_in=h * dh),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, dh), dt)
+        p["bk"] = jnp.zeros((hk, dh), dt)
+        p["bv"] = jnp.zeros((hk, dh), dt)
+    return p
+
+
+def qkv_proj(params, cfg: ModelConfig, x, positions=None, rope: bool = True):
+    """x: (B, S, d) -> q (B,S,H,dh), k/v (B,S,Hkv,dh)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def out_proj(params, attn_out):
+    out = jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])
+    out = shard(out, "batch", "seq", "embed_out")   # identity unless decode
+    return shard(out, "batch", "seq", "embed")
+
+
+# ------------------------------------------------------- chunked flash
+def _block_mask(q_pos, k_pos, causal, window, kv_len, skv_bound):
+    """(Sq, blk) bool mask; window/kv_len may be traced float scalars."""
+    mask = k_pos[None, :] < kv_len
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    w = jnp.where(window > 0, window, skv_bound)
+    return mask & (q_pos[:, None] - k_pos[None, :] < w)
+
+
+def _split_blocks(x, nblk, block):
+    B = x.shape[0]
+    return x.reshape(B, nblk, block, *x.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+
+def _flash_fwd_impl(causal, block, softcap, q, k, v, window, q_offset, kv_len):
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    nblk = -(-Skv // block)
+    pad = nblk * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qh = q.reshape(B, Sq, Hkv, G, dh)
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.float32)
+    skv_bound = float(Skv + Sq + 1)
+
+    kb, vb = _split_blocks(k, nblk, block), _split_blocks(v, nblk, block)
+    starts = (jnp.arange(nblk) * block).astype(jnp.float32)
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, dh), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, start = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = start + jnp.arange(block, dtype=jnp.float32)
+        mask = _block_mask(q_pos, k_pos, causal, window, kv_len, skv_bound)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))               # (B,Hkv,G,Sq)
+    out = out.reshape(B, Hkv * G, Sq, dh).transpose(0, 2, 1, 3).reshape(
+        B, Sq, H, dh).astype(q.dtype)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _flash(causal, block, softcap, q, k, v, window, q_offset, kv_len):
+    out, _ = _flash_fwd_impl(causal, block, softcap, q, k, v, window, q_offset, kv_len)
+    return out
+
+
+def _flash_fwd(causal, block, softcap, q, k, v, window, q_offset, kv_len):
+    out, lse = _flash_fwd_impl(causal, block, softcap, q, k, v, window, q_offset, kv_len)
+    return out, (q, k, v, out, lse, window, q_offset, kv_len)
+
+
+def _flash_bwd(causal, block, softcap, res, dout):
+    """FA2-style backward: re-compute p per block from the saved LSE."""
+    q, k, v, out, lse, window, q_offset, kv_len = res
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    nblk = -(-Skv // block)
+    pad = nblk * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qh = q.reshape(B, Sq, Hkv, G, dh)
+    doh = dout.reshape(B, Sq, Hkv, G, dh)
+    outh = out.reshape(B, Sq, Hkv, G, dh)
+    # D_t = sum_d dout_t * out_t  (rowsum of p*dp)
+    D = jnp.einsum("bqhgd,bqhgd->bhgq", doh.astype(jnp.float32),
+                   outh.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.float32)
+    skv_bound = float(Skv + Sq + 1)
+    kb, vb = _split_blocks(k, nblk, block), _split_blocks(v, nblk, block)
+    starts = (jnp.arange(nblk) * block).astype(jnp.float32)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, dh), jnp.float32)
+
+    def body(dq, xs):
+        kblk, vblk, start = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = start + jnp.arange(block, dtype=jnp.float32)
+        mask = _block_mask(q_pos, k_pos, causal, window, kv_len, skv_bound)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                    # (B,Hkv,G,Sq,blk)
+        dv_blk = jnp.einsum("bhgqk,bqhgd->bkhd", p, doh.astype(jnp.float32))
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", doh, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - D[..., None]) * scale
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kblk,
+                             preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qh.astype(jnp.float32))
+        return dq, (dk_blk, dv_blk)
+
+    dq, (dkb, dvb) = jax.lax.scan(body, dq0, (kb, vb, starts))
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, nblk * block, Hkv, dh)[:, :Skv]
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, nblk * block, Hkv, dh)[:, :Skv]
+    dq = dq.reshape(B, Sq, H, dh)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(window), jnp.zeros_like(q_offset),
+            jnp.zeros_like(kv_len))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool, window=0, q_offset=0,
+                        kv_len=None, block: int = 1024, softcap: float = 0.0):
+    """Online-softmax attention, scanned over KV blocks, flash-style VJP.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh). ``window``: if > 0 (may be a
+    traced scalar), only keys with q_pos - k_pos < window attend (plus the
+    causal constraint). ``kv_len``: number of valid kv positions (for padded
+    caches). Returns (B, Sq, H, dh).
+    """
+    Skv = k.shape[1]
+    block = min(block, Skv)
+    window_f = jnp.asarray(window, jnp.float32)
+    q_offset_f = jnp.asarray(q_offset, jnp.float32)
+    kv_len_f = jnp.asarray(Skv if kv_len is None else kv_len, jnp.float32)
+    return _flash(causal, block, float(softcap), q, k, v,
+                  window_f, q_offset_f, kv_len_f)
+
+
+def flash_attention_banded(q, k, v, *, window: int, block: int = 1024,
+                           softcap: float = 0.0):
+    """Sliding-window attention with KV *block-skipping* (§Perf iteration).
+
+    The plain path computes the full (Sq, Skv) score matrix and masks it —
+    O(S^2) compute even when only a width-``window`` band is live.  Here the
+    q sequence is scanned in blocks and each block attends only to its own
+    KV band (ceil(window/block)+1 blocks), so compute and HBM traffic scale
+    as O(S * window).  Requires a *static* integer window (causal).
+    """
+    B, S, H, dh = q.shape
+    blk = min(block, S, max(window, 128))
+    while S % blk:
+        blk //= 2
+    nq = S // blk
+    wblk = -(-window // blk)                        # band blocks before diag
+    nband = min(wblk + 1, nq)
+    if nband >= nq:                                 # band covers everything
+        return flash_attention_jnp(q, k, v, causal=True, window=window,
+                                   block=blk, softcap=softcap)
+
+    def body(_, i):
+        q_i = jax.lax.dynamic_slice_in_dim(q, i * blk, blk, axis=1)
+        start = jnp.maximum(i - (nband - 1), 0) * blk
+        k_b = jax.lax.dynamic_slice_in_dim(k, start, nband * blk, axis=1)
+        v_b = jax.lax.dynamic_slice_in_dim(v, start, nband * blk, axis=1)
+        # positions inside the band are relative; shifting q by the band
+        # start preserves (q_pos - k_pos) for the causal + window masks
+        o_i = flash_attention_jnp(q_i, k_b, v_b, causal=True, window=window,
+                                  q_offset=i * blk - start, block=blk,
+                                  softcap=softcap)
+        return None, o_i
+
+    _, o_blocks = jax.lax.scan(body, None, jnp.arange(nq))
+    return o_blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def flash_dispatch(q, k, v, *, causal: bool, window=0, block: int = 1024,
+                   softcap: float = 0.0, kv_len=None):
+    """Route to the banded (block-skipping) path when the window is a
+    static int — the §Perf sliding-window optimization — else the masked
+    full path (traced per-layer windows, cross-attn, ragged kv)."""
+    import numpy as _np
+    if (isinstance(window, (int, _np.integer)) and int(window) > 0 and causal
+            and kv_len is None and q.shape[1] == k.shape[1]):
+        return flash_attention_banded(q, k, v, window=int(window),
+                                      block=block, softcap=softcap)
+    return flash_attention_jnp(q, k, v, causal=causal, window=window,
+                               kv_len=kv_len, block=block, softcap=softcap)
+
+
+# --------------------------------------------------------------- decode
+def attend_cache(q, cache_k, cache_v, cur_pos, *, window=0, softcap: float = 0.0):
+    """Single-token decode attention over a (padded) KV cache.
+
+    q: (B, 1, H, dh); cache_k/v: (B, Smax, Hkv, dh); cur_pos: scalar index of
+    the token being generated (cache holds positions [0, cur_pos]).
+    """
+    B, _, H, dh = q.shape
+    Smax, Hkv = cache_k.shape[1], cache_k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qh = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, cache_k).astype(jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    k_pos = jnp.arange(Smax)
+    mask = k_pos <= cur_pos
+    w = jnp.asarray(window)
+    w = jnp.where(w > 0, w, Smax + 1)
+    mask = mask & (cur_pos - k_pos < w)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache_v.dtype), cache_v)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------- full blocks
+def self_attention(params, cfg: ModelConfig, x, positions, *, causal=True,
+                   window=0, block=1024):
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    o = flash_dispatch(q, k, v, causal=causal, window=window, block=block,
+                       softcap=cfg.attn_logit_softcap)
+    return out_proj(params, o)
+
+
+def self_attention_prefill(params, cfg: ModelConfig, x, positions, *, window=0,
+                           block=1024):
+    """Returns (out, (k, v)) so the caller can seed the KV cache."""
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    o = flash_dispatch(q, k, v, causal=True, window=window, block=block,
+                       softcap=cfg.attn_logit_softcap)
+    return out_proj(params, o), (k, v)
+
+
+def self_attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v,
+                          cur_pos, *, window=0):
+    """One-token step: writes (k, v) at cur_pos, attends over the cache."""
+    positions = jnp.asarray(cur_pos)[None]
+    q, k, v = qkv_proj(params, cfg, x, positions[None])
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cur_pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cur_pos, axis=1)
+    o = attend_cache(q, cache_k, cache_v, cur_pos, window=window,
+                     softcap=cfg.attn_logit_softcap)
+    return out_proj(params, o), (cache_k, cache_v)
+
+
+def cross_attention(params, cfg: ModelConfig, x, mem_k, mem_v, *, mem_len=None,
+                    block=1024):
+    """Decoder->encoder attention; memory K/V precomputed (B, Sm, Hkv, dh)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    o = flash_attention_jnp(q, mem_k, mem_v, causal=False, kv_len=mem_len, block=block)
+    return out_proj(params, o)
+
+
+def encode_memory(params, cfg: ModelConfig, mem):
+    """Precompute cross-attention K/V from encoder output (no rope)."""
+    k = jnp.einsum("bsd,dhk->bshk", mem, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mem, params["wv"])
+    return k, v

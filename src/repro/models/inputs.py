@@ -1,0 +1,80 @@
+"""Model input construction: concrete batches (smoke/examples) and
+ShapeDtypeStruct stand-ins (dry-run lowering, no allocation).
+
+Modality frontends are STUBS per the assignment: ``[audio]``/``[vlm]`` archs
+receive precomputed frame/patch embeddings here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_cache
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text positions for VLM (rest of the sequence is the patch prefix)."""
+    if cfg.family == "vlm" and cfg.n_prefix_embeds_ratio:
+        return seq_len - seq_len // cfg.n_prefix_embeds_ratio
+    return seq_len
+
+
+def prefix_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - _text_len(cfg, seq_len)
+
+
+def make_train_batch(rng, cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    St = _text_len(cfg, seq_len)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, St), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "encdec":
+        Se = max(1, seq_len // cfg.enc_len_ratio)
+        out["enc_embeds"] = jax.random.normal(k1, (batch, Se, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and St < seq_len:
+        out["prefix_embeds"] = jax.random.normal(k1, (batch, seq_len - St, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    St = _text_len(cfg, S)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, St), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        Se = max(1, S // cfg.enc_len_ratio)
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((B, Se, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and St < S:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct((B, S - St, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """One-token step: token + cache-of-length-seq_len (ShapeDtypeStructs)."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache,
+        "cur_pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_decode_inputs(rng, cfg: ModelConfig, batch: int, max_len: int, cur_pos: int):
+    token = jax.random.randint(rng, (batch, 1), 0, cfg.vocab_size, jnp.int32)
+    cache = init_cache(cfg, batch, max_len)
+    return {"token": token, "cache": cache, "cur_pos": jnp.asarray(cur_pos, jnp.int32)}

@@ -1,0 +1,108 @@
+"""Shared building blocks: norms, rotary embeddings, SwiGLU, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------- init
+def dense_init(rng, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, weight, eps):
+    # keep the (B,S,d) tensor in compute dtype; only the reduction runs fp32
+    # (a full fp32 copy of x gets hoisted into the saved-residual stack by
+    # XLA and doubles training activation memory — see DESIGN.md).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + weight).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps):
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32) - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return y * weight.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def make_norm_params(cfg: ModelConfig, rng=None):
+    d = cfg.d_model
+    if cfg.norm == "ln":
+        return {"w": jnp.ones((d,), pdtype_of(cfg)), "b": jnp.zeros((d,), pdtype_of(cfg))}
+    return {"w": jnp.zeros((d,), pdtype_of(cfg))}
+
+
+def apply_norm(cfg: ModelConfig, params, x):
+    if cfg.norm == "ln":
+        return layer_norm(x, params["w"], params["b"], cfg.norm_eps)
+    return rms_norm(x, params["w"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------- rotary
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                          # (dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- FFN
+def make_swiglu_params(rng, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(params, x):
+    from repro.dist.sharding import shard
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "seq", "dff")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    return shard(out, "batch", "seq", "embed")
+
+
+# ----------------------------------------------------------------- misc
+def stack_layer_params(init_fn, rng, n_layers: int):
+    """vmap a per-layer init over split rngs -> params stacked on axis 0."""
+    rngs = jax.random.split(rng, n_layers)
+    return jax.vmap(init_fn)(rngs)
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN with two dispatch implementations.
+
+``einsum``  — GShard/Switch-style one-hot dispatch+combine tensors. This is
+              the literature-baseline (and the paper-era) formulation; its
+              dispatch einsums burn real MXU FLOPs, which the roofline's
+              useful-FLOPs ratio exposes (see EXPERIMENTS.md §Perf).
+``gather``  — argsort-based dispatch: tokens are sorted by expert id and
+              scattered into (E, C, d) buffers; zero matmul overhead. Used
+              as the beyond-paper optimization (and default for k=6/64e).
+
+Experts are sharded over the ``model`` mesh axis (EP): expert weights are
+(E, d, f) with E-major sharding; dispatched activations (G, E, C, d) carry
+E on ``model`` so each expert's FFN runs where its weights live.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init, pdtype_of
+
+
+def make_moe_params(rng, cfg: ModelConfig):
+    d, e = cfg.d_model, cfg.moe
+    dt = pdtype_of(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(k1, (d, e.n_experts), jnp.float32),
+        "w_gate": dense_init(k2, (e.n_experts, d, e.expert_d_ff), dt, fan_in=d),
+        "w_up": dense_init(k3, (e.n_experts, d, e.expert_d_ff), dt, fan_in=d),
+        "w_down": dense_init(k4, (e.n_experts, e.expert_d_ff, d), dt, fan_in=e.expert_d_ff),
+    }
+    if e.n_shared_experts:
+        f = e.n_shared_experts * e.expert_d_ff
+        ks = jax.random.split(k5, 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks[0], (d, f), dt),
+            "w_up": dense_init(ks[1], (d, f), dt),
+            "w_down": dense_init(ks[2], (f, d), dt),
+        }
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    e = cfg.moe
+    c = int(tokens_per_group * e.top_k * e.capacity_factor / e.n_experts) + 1
+    return max(8, ((c + 7) // 8) * 8)  # align
+
+
+def _router(params, cfg: ModelConfig, x):
+    """x (G, S, d) -> gates (G, S, k), idx (G, S, k), aux_loss (scalar)."""
+    e = cfg.moe
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, e.top_k)          # (G,S,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing loss
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = jnp.zeros((e.n_experts,)).at[idx.reshape(-1)].add(1.0) / idx.size
+    aux = e.n_experts * jnp.sum(me * ce)
+    return gate_vals, idx, aux
+
+
+def _expert_ffn(params, h):
+    """h: (..., E, C, d) with E leading-contracted against (E, d, f)."""
+    h = shard(h, "batch", "expert", "cap", "embed")
+    g = jnp.einsum("gecd,edf->gecf", h, params["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", h, params["w_up"])
+    a = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    out = jnp.einsum("gecf,efd->gecd", a, params["w_down"])
+    return shard(out, "batch", "expert", "cap", "embed")
+
+
+# ------------------------------------------------------------- einsum impl
+def _moe_einsum(params, cfg: ModelConfig, x):
+    G, S, d = x.shape
+    e = cfg.moe
+    C = _capacity(cfg, S)
+    gates, idx, aux = _router(params, cfg, x)
+    combine = jnp.zeros((G, S, e.n_experts, C), jnp.float32)
+    for ki in range(e.top_k):
+        oh = jax.nn.one_hot(idx[..., ki], e.n_experts, dtype=jnp.float32)   # (G,S,E)
+        pos = (jnp.cumsum(oh, axis=1) - 1.0) * oh                            # (G,S,E)
+        keep = (pos < C) & (oh > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32) * keep[..., None]
+        combine = combine + gates[..., ki, None, None] * oh[..., None] * pos_oh
+    dispatch = (combine > 0).astype(x.dtype)                                 # (G,S,E,C)
+    h = jnp.einsum("gsec,gsd->gecd", dispatch, x)
+    out = _expert_ffn(params, h)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), out)
+    return y, aux
+
+
+# ------------------------------------------------------------- gather impl
+def _moe_gather(params, cfg: ModelConfig, x):
+    G, S, d = x.shape
+    e = cfg.moe
+    k = e.top_k
+    C = _capacity(cfg, S)
+    gates, idx, aux = _router(params, cfg, x)
+
+    def per_group(xg, idxg, gateg):
+        # xg (S,d); idxg/gateg (S,k)
+        eid = idxg.reshape(-1)                       # (S*k,)
+        tok = jnp.repeat(jnp.arange(S), k)           # token index per slot
+        gat = gateg.reshape(-1)
+        order = jnp.argsort(eid)                     # stable
+        eid_s, tok_s, gat_s = eid[order], tok[order], gat[order]
+        # position within expert = rank - first-rank-of-expert
+        first = jnp.searchsorted(eid_s, jnp.arange(e.n_experts), side="left")
+        slot = jnp.arange(S * k) - first[eid_s]
+        keep = slot < C
+        slot_c = jnp.clip(slot, 0, C - 1)
+        buf = jnp.zeros((e.n_experts, C, d), xg.dtype)
+        buf = buf.at[eid_s, slot_c].add(jnp.where(keep[:, None], xg[tok_s], 0))
+        return buf, (eid_s, slot_c, tok_s, gat_s, keep)
+
+    buf, meta = jax.vmap(per_group)(x, idx, gates)   # buf (G,E,C,d)
+    out = _expert_ffn(params, buf)                   # (G,E,C,d)
+
+    def per_group_combine(outg, m):
+        eid_s, slot_c, tok_s, gat_s, keep = m
+        vals = outg[eid_s, slot_c] * (gat_s * keep).astype(outg.dtype)[:, None]
+        y = jnp.zeros((S, d), outg.dtype).at[tok_s].add(vals)
+        return y
+
+    y = jax.vmap(per_group_combine)(out, meta)
+    return y, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (y, aux_loss). Groups = batch rows."""
+    impl = _moe_einsum if cfg.moe.impl == "einsum" else _moe_gather
+    y, aux = impl(params, cfg, x)
+    if cfg.moe.n_shared_experts:
+        sp = params["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        y = y + jnp.einsum("bsf,fd->bsd",
+                           jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+                           sp["w_down"])
+    return y, aux

@@ -1,0 +1,341 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and Mamba-2 style SSD.
+
+All train/prefill paths are *chunkwise-parallel* (lax.scan over chunks,
+parallel inside a chunk) so the state never round-trips HBM per token —
+the same VMEM-residency argument as the attention kernel (DESIGN.md §3).
+Decode paths are single-step recurrences over carried state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, pdtype_of
+
+NEG_INF = -1e30
+
+
+# ======================================================================
+# mLSTM — matrix-memory LSTM (xLSTM [arXiv:2405.04517]), chunkwise form.
+# ======================================================================
+def make_mlstm_params(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    H, dh = cfg.ssm.n_heads, cfg.ssm.head_dim
+    di = H * dh
+    dt = pdtype_of(cfg)
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), dt),
+        "wq": dense_init(ks[1], (di, H, dh), dt, fan_in=di),
+        "wk": dense_init(ks[2], (di, H, dh), dt, fan_in=di),
+        "wv": dense_init(ks[3], (di, H, dh), dt, fan_in=di),
+        "w_if": dense_init(ks[4], (d, 2 * H), jnp.float32, fan_in=d),
+        "b_if": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                 jnp.linspace(3.0, 6.0, H)]),
+        "w_down": dense_init(ks[5], (di, d), dt),
+        "ogate_w": dense_init(ks[6], (d, di), dt),
+    }
+
+
+def mlstm_init_state(batch: int, H: int, dh: int):
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), NEG_INF, jnp.float32),
+    }
+
+
+def _mlstm_chunk_step(qc, kc, vc, li, lf, state):
+    """One chunk: qc/kc/vc (B,K,H,dh); li/lf (B,K,H) log gates; state dict."""
+    B, K, H, dh = qc.shape
+    scale = 1.0 / math.sqrt(dh)
+    b = jnp.cumsum(lf, axis=1)                       # (B,K,H) inclusive decay
+    g = li - b                                       # log source weight
+    m_intra = jax.lax.cummax(g, axis=1) + b          # (B,K,H)
+    m_inter = state["m"][:, None] + b                # (B,K,H)
+    m_t = jnp.maximum(m_intra, m_inter)
+
+    # intra-chunk: D[t,j] = exp(b_t + g_j - m_t) for j <= t (head-major)
+    bh = jnp.transpose(b, (0, 2, 1))                 # (B,H,K)
+    gh = jnp.transpose(g, (0, 2, 1))
+    mh = jnp.transpose(m_t, (0, 2, 1))
+    logD = bh[:, :, :, None] + gh[:, :, None, :] - mh[:, :, :, None]  # (B,H,K,K)
+    causal = jnp.tril(jnp.ones((K, K), bool))
+    D = jnp.where(causal, jnp.exp(logD), 0.0)
+
+    qh = jnp.transpose(qc, (0, 2, 1, 3)).astype(jnp.float32)  # (B,H,K,dh)
+    kh = jnp.transpose(kc, (0, 2, 1, 3)).astype(jnp.float32)
+    vh = jnp.transpose(vc, (0, 2, 1, 3)).astype(jnp.float32)
+    s = jnp.einsum("bhtd,bhjd->bhtj", qh, kh) * scale
+    w = s * D
+    num = jnp.einsum("bhtj,bhjd->bhtd", w, vh)
+    den = w.sum(-1)                                   # (B,H,K)
+
+    # inter-chunk contribution
+    inter_w = jnp.exp(m_inter - m_t)                  # (B,K,H)
+    inter_wh = jnp.transpose(inter_w, (0, 2, 1))      # (B,H,K)
+    num = num + inter_wh[..., None] * jnp.einsum("bhtd,bhde->bhte", qh * scale, state["C"])
+    den = den + inter_wh * jnp.einsum("bhtd,bhd->bht", qh * scale, state["n"])
+
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-mh))[..., None]
+    h = jnp.transpose(h, (0, 2, 1, 3))                # (B,K,H,dh)
+
+    # state update to chunk end
+    Ftot = b[:, -1]                                   # (B,H)
+    m_next = jnp.maximum(state["m"] + Ftot, Ftot + jnp.max(g, axis=1))
+    w_prev = jnp.exp(state["m"] + Ftot - m_next)      # (B,H)
+    w_src = jnp.exp(Ftot[:, None] + g - m_next[:, None])   # (B,K,H)
+    C_new = w_prev[..., None, None] * state["C"] + jnp.einsum(
+        "bkh,bhkd,bhke->bhde", w_src, jnp.transpose(kc, (0, 2, 1, 3)).astype(jnp.float32),
+        jnp.transpose(vc, (0, 2, 1, 3)).astype(jnp.float32))
+    n_new = w_prev[..., None] * state["n"] + jnp.einsum(
+        "bkh,bhkd->bhd", w_src, jnp.transpose(kc, (0, 2, 1, 3)).astype(jnp.float32))
+    return h, {"C": C_new, "n": n_new, "m": m_next}
+
+
+def mlstm_sequence(q, k, v, i_raw, f_raw, state=None, chunk: int = 128):
+    """q/k/v: (B,S,H,dh); i_raw/f_raw: (B,S,H). Returns (h, final_state)."""
+    B, S, H, dh = q.shape
+    if state is None:
+        state = mlstm_init_state(B, H, dh)
+    li = i_raw.astype(jnp.float32)                    # log input gate (exp gate)
+    lf = -jax.nn.softplus(-f_raw.astype(jnp.float32))  # log sigmoid forget gate
+    K = min(chunk, S)
+    nchunk = -(-S // K)
+    pad = nchunk * K - S
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, padw + ((0, 0),))
+        k = jnp.pad(k, padw + ((0, 0),))
+        v = jnp.pad(v, padw + ((0, 0),))
+        li = jnp.pad(li, padw, constant_values=NEG_INF)  # no source weight
+        lf = jnp.pad(lf, padw)                            # decay 1 on padding
+
+    def split(x):
+        return x.reshape(B, nchunk, K, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    def body(st, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, st = _mlstm_chunk_step(qc, kc, vc, lic, lfc, st)
+        return st, h
+
+    state, hs = jax.lax.scan(body, state, (split(q), split(k), split(v), split(li), split(lf)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * K, H, dh)[:, :S]
+    return h.astype(q.dtype), state
+
+
+def mlstm_step(q1, k1, v1, i_raw, f_raw, state):
+    """Single decode step. q1/k1/v1: (B,H,dh); i_raw/f_raw: (B,H)."""
+    scale = 1.0 / math.sqrt(q1.shape[-1])
+    li = i_raw.astype(jnp.float32)
+    lf = -jax.nn.softplus(-f_raw.astype(jnp.float32))
+    m_new = jnp.maximum(lf + state["m"], li)
+    fw = jnp.exp(lf + state["m"] - m_new)
+    iw = jnp.exp(li - m_new)
+    kf, vf, qf = (k1.astype(jnp.float32), v1.astype(jnp.float32), q1.astype(jnp.float32))
+    C = fw[..., None, None] * state["C"] + iw[..., None, None] * (kf[..., :, None] * vf[..., None, :])
+    n = fw[..., None] * state["n"] + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf * scale, C)
+    den = jnp.einsum("bhd,bhd->bh", qf * scale, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q1.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block(params, cfg: ModelConfig, x, state=None, decode: bool = False):
+    """Full mLSTM block: up-proj, per-head qkv+gates, recurrence, gated down."""
+    H, dh = cfg.ssm.n_heads, cfg.ssm.head_dim
+    di = H * dh
+    u = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    a, z = jnp.split(u, 2, axis=-1)                   # (B,S,di) each
+    q = jnp.einsum("bse,ehd->bshd", a, params["wq"])
+    k = jnp.einsum("bse,ehd->bshd", a, params["wk"])
+    v = jnp.einsum("bse,ehd->bshd", a, params["wv"])
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)       # (B,S,H)
+    og = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["ogate_w"]).astype(jnp.float32)).astype(x.dtype)
+    if decode:
+        h, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0], state)
+        h = h[:, None]
+    else:
+        h, state = mlstm_sequence(q, k, v, i_raw, f_raw, state, chunk=cfg.ssm.chunk)
+    h = h.reshape(*h.shape[:2], di) * og
+    return jnp.einsum("bse,ed->bsd", h, params["w_down"]), state
+
+
+# ======================================================================
+# sLSTM — scalar-memory LSTM with recurrent gating (strictly sequential).
+# ======================================================================
+def make_slstm_params(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    H, dh = cfg.ssm.n_heads, cfg.ssm.head_dim
+    dt = pdtype_of(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), jnp.float32, fan_in=d),   # z,i,f,o
+        "r_gates": dense_init(ks[1], (4, H, dh, dh), jnp.float32, fan_in=dh),
+        "b_gates": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                                    jnp.tile(jnp.linspace(3.0, 6.0, H), dh).reshape(dh, H).T.reshape(-1),
+                                    jnp.zeros((d,), jnp.float32)]),
+        "w_out": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def slstm_init_state(batch: int, d: int, H: int, dh: int):
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": jnp.full((batch, H, dh), NEG_INF, jnp.float32)}
+
+
+def _slstm_cell(params, cfg: ModelConfig, xw, st):
+    """xw: (B, 4d) precomputed input contribution; st: state dict."""
+    H, dh = cfg.ssm.n_heads, cfg.ssm.head_dim
+    B = xw.shape[0]
+    rec = jnp.einsum("ghde,bhe->bghd", params["r_gates"], st["h"])   # (B,4,H,dh)
+    gates = xw.reshape(B, 4, H, dh) + rec + params["b_gates"].reshape(4, H, dh)
+    z_t = jnp.tanh(gates[:, 0])
+    i_raw, f_raw = gates[:, 1], gates[:, 2]
+    o_t = jax.nn.sigmoid(gates[:, 3])
+    lf = -jax.nn.softplus(-f_raw)                     # log sigmoid forget
+    m_new = jnp.maximum(lf + st["m"], i_raw)
+    iw = jnp.exp(i_raw - m_new)
+    fw = jnp.exp(lf + st["m"] - m_new)
+    c = fw * st["c"] + iw * z_t
+    n = fw * st["n"] + iw
+    h = o_t * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_block(params, cfg: ModelConfig, x, state=None, decode: bool = False):
+    B, S, d = x.shape
+    H, dh = cfg.ssm.n_heads, cfg.ssm.head_dim
+    if state is None:
+        state = slstm_init_state(B, d, H, dh)
+    xw = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["w_gates"])  # (B,S,4d)
+    if decode:
+        state = _slstm_cell(params, cfg, xw[:, 0], state)
+        hs = state["h"][:, None]
+    else:
+        def body(st, xt):
+            st = _slstm_cell(params, cfg, xt, st)
+            return st, st["h"]
+        state, hs = jax.lax.scan(body, state, xw.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2, 3)                 # (B,S,H,dh)
+    out = hs.reshape(*hs.shape[:2], d).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", out, params["w_out"]), state
+
+
+# ======================================================================
+# Mamba-2 style SSD (hymba's SSM heads) — scalar-per-head decay, chunked.
+# ======================================================================
+def make_mamba_params(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    H, dh, N = cfg.ssm.n_heads, cfg.ssm.head_dim, cfg.ssm.d_state
+    di = H * dh
+    dt = pdtype_of(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dt),                 # x, z
+        "conv_w": dense_init(ks[1], (cfg.ssm.conv_dim, di), dt, fan_in=cfg.ssm.conv_dim),
+        "w_bc": dense_init(ks[2], (d, 2 * N), dt),                  # B, C (ngroups=1)
+        "w_dt": dense_init(ks[3], (d, H), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, H))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def mamba_init_state(batch: int, cfg: ModelConfig):
+    H, dh, N = cfg.ssm.n_heads, cfg.ssm.head_dim, cfg.ssm.d_state
+    di = H * dh
+    return {
+        "ssm": jnp.zeros((batch, H, dh, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, di), jnp.float32),
+    }
+
+
+def _causal_conv(params, cfg: ModelConfig, xc, conv_state=None):
+    """Depthwise causal conv over (B,S,di); returns (y, new_tail_state)."""
+    K = cfg.ssm.conv_dim
+    if conv_state is None:
+        pad = jnp.zeros((xc.shape[0], K - 1, xc.shape[2]), xc.dtype)
+    else:
+        pad = conv_state.astype(xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)           # (B, S+K-1, di)
+    y = sum(xp[:, i:i + xc.shape[1]] * params["conv_w"][i] for i in range(K))
+    new_state = xp[:, -(K - 1):].astype(jnp.float32)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xc.dtype), new_state
+
+
+def ssd_sequence(xh, B_t, C_t, la, state, chunk: int):
+    """Chunked SSD: xh (B,S,H,dh) dt-scaled inputs; B_t/C_t (B,S,N);
+    la (B,S,H) log decay (<= 0); state (B,H,dh,N)."""
+    Bb, S, H, dh = xh.shape
+    N = B_t.shape[-1]
+    K = min(chunk, S)
+    nchunk = -(-S // K)
+    pad = nchunk * K - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_t = jnp.pad(B_t, ((0, 0), (0, pad), (0, 0)))
+        C_t = jnp.pad(C_t, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+
+    def split(x):
+        return x.reshape(Bb, nchunk, K, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    def body(st, xs):
+        xc, bc, cc, lac = xs                          # (B,K,H,dh),(B,K,N),(B,K,N),(B,K,H)
+        b = jnp.cumsum(lac, axis=1)                   # (B,K,H)
+        # intra-chunk: y_t += sum_{j<=t} exp(b_t-b_j) (C_t.B_j) x_j
+        sc = jnp.einsum("btn,bjn->btj", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        logw = b[:, :, None, :] - b[:, None, :, :]     # (B,t,j,H)
+        causal = jnp.tril(jnp.ones((K, K), bool))[None, :, :, None]
+        w = jnp.where(causal, jnp.exp(logw), 0.0) * sc[..., None]
+        y = jnp.einsum("btjh,bjhd->bthd", w, xc.astype(jnp.float32))
+        # inter-chunk: y_t += exp(b_t) C_t . h_prev
+        winter = jnp.exp(b)                            # (B,K,H)
+        y = y + winter[..., None] * jnp.einsum("btn,bhdn->bthd", cc.astype(jnp.float32), st)
+        # state update
+        Ftot = b[:, -1]                                # (B,H)
+        wsrc = jnp.exp(Ftot[:, None] - b)              # (B,K,H)
+        st = jnp.exp(Ftot)[:, :, None, None] * st + jnp.einsum(
+            "bkh,bkhd,bkn->bhdn", wsrc, xc.astype(jnp.float32), bc.astype(jnp.float32))
+        return st, y
+
+    state, ys = jax.lax.scan(body, state, (split(xh), split(B_t), split(C_t), split(la)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, nchunk * K, H, dh)[:, :S]
+    return y, state
+
+
+def mamba_block(params, cfg: ModelConfig, x, state=None, decode: bool = False):
+    """Returns ((B,S,H*dh) heads output BEFORE out-proj, new_state)."""
+    B, S, d = x.shape
+    H, dh, N = cfg.ssm.n_heads, cfg.ssm.head_dim, cfg.ssm.d_state
+    di = H * dh
+    if state is None:
+        state = mamba_init_state(B, cfg)
+    u = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xc, z = jnp.split(u, 2, axis=-1)
+    xc, conv_state = _causal_conv(params, cfg, xc, state["conv"])
+    bc = jnp.einsum("bsd,dn->bsn", x, params["w_bc"])
+    B_t, C_t = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["w_dt"])
+                         + params["dt_bias"])         # (B,S,H)
+    la = -jnp.exp(params["A_log"]) * dt               # log decay <= 0
+    xh = xc.reshape(B, S, H, dh) * dt[..., None].astype(xc.dtype)
+    if decode:
+        st = state["ssm"]
+        a = jnp.exp(la[:, 0])                          # (B,H)
+        st = a[..., None, None] * st + jnp.einsum("bhd,bn->bhdn",
+                                                  xh[:, 0].astype(jnp.float32),
+                                                  B_t[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhdn->bhd", C_t[:, 0].astype(jnp.float32), st)[:, None]
+        new_ssm = st
+    else:
+        y, new_ssm = ssd_sequence(xh, B_t, C_t, la, state["ssm"], cfg.ssm.chunk)
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y, {"ssm": new_ssm, "conv": conv_state}

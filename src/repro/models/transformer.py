@@ -1,0 +1,465 @@
+"""Model assembly: init, train forward, prefill, decode — all families.
+
+Layer stacks are ``lax.scan`` over layer-stacked params (axis 0), which keeps
+the HLO size O(1) in depth (fast multi-pod compiles) and is remat-friendly.
+Per-layer heterogeneity (gemma3's 5:1 local:global windows) is expressed as
+per-layer *data* (a windows array scanned as xs), never as per-layer code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, dense_init, embed_init,
+                                 make_norm_params, make_swiglu_params,
+                                 pdtype_of, stack_layer_params)
+
+
+# ======================================================================
+# Parameter init
+# ======================================================================
+def _decoder_layer_init(rng, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(rng, 6)
+    p = {
+        "attn_norm": make_norm_params(cfg),
+        "attn": attn.make_attn_params(ks[0], cfg),
+        "ffn_norm": make_norm_params(cfg),
+    }
+    if cfg.moe.n_experts:
+        p["ffn"] = moe_mod.make_moe_params(ks[1], cfg)
+    elif cfg.d_ff:
+        p["ffn"] = make_swiglu_params(ks[1], cfg.d_model, cfg.d_ff, pdtype_of(cfg))
+    if cross:
+        p["cross_norm"] = make_norm_params(cfg)
+        p["cross"] = attn.make_attn_params(ks[2], cfg, cross=True)
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm_mod.make_mamba_params(ks[3], cfg)
+        dh = cfg.head_dim
+        p["hy_norm_attn"] = jnp.zeros((dh,), jnp.float32)
+        p["hy_norm_ssm"] = jnp.zeros((dh,), jnp.float32)
+        p["hy_beta_attn"] = jnp.ones((cfg.n_heads, dh), pdtype_of(cfg))
+        p["hy_beta_ssm"] = jnp.ones((cfg.n_heads, dh), pdtype_of(cfg))
+    return p
+
+
+def _xlstm_pair_init(rng, cfg: ModelConfig):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "m_norm": make_norm_params(cfg),
+        "mlstm": ssm_mod.make_mlstm_params(k1, cfg),
+        "s_norm": make_norm_params(cfg),
+        "slstm": ssm_mod.make_slstm_params(k2, cfg),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 8)
+    dt = pdtype_of(cfg)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt),
+        "final_norm": make_norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), dt)
+    if cfg.family == "ssm":
+        n_pairs = cfg.n_layers // 2
+        p["layers"] = stack_layer_params(lambda r: _xlstm_pair_init(r, cfg), ks[2], n_pairs)
+    elif cfg.family == "encdec":
+        enc_cfg = cfg
+        p["enc_layers"] = stack_layer_params(
+            lambda r: _decoder_layer_init(r, enc_cfg), ks[3], cfg.n_enc_layers)
+        p["enc_final_norm"] = make_norm_params(cfg)
+        p["layers"] = stack_layer_params(
+            lambda r: _decoder_layer_init(r, cfg, cross=True), ks[2], cfg.n_layers)
+    else:
+        p["layers"] = stack_layer_params(
+            lambda r: _decoder_layer_init(r, cfg), ks[2], cfg.n_layers)
+    return p
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding window (0 = full attention)."""
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    if cfg.global_every:
+        w[cfg.global_every - 1::cfg.global_every] = 0
+    return w
+
+
+# ======================================================================
+# Shared layer bodies
+# ======================================================================
+def _ffn_apply(lp, cfg: ModelConfig, x):
+    """Returns (y, aux)."""
+    if cfg.moe.n_experts:
+        return moe_mod.moe_ffn(lp["ffn"], cfg, x)
+    if cfg.d_ff:
+        from repro.models.layers import swiglu
+        return swiglu(lp["ffn"], x), 0.0
+    return jnp.zeros_like(x), 0.0
+
+
+def _headnorm(x, w, eps=1e-6):
+    """Per-head RMS norm over the last (dh) dim; w: (dh,)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w)).astype(dt)
+
+
+def _hymba_mixer(lp, cfg: ModelConfig, h, positions, window, cache=None,
+                 cur_pos=None, decode=False):
+    """Parallel attention + mamba heads, fused output projection."""
+    ap = lp["attn"]
+    new_cache = {}
+    if decode:
+        q, k, v = attn.qkv_proj(ap, cfg, h, jnp.asarray(cur_pos)[None][None])
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur_pos, axis=1)
+        a_out = attn.attend_cache(q, ck, cv, cur_pos, window=window)
+        new_cache.update(k=ck, v=cv)
+        s_out, sstate = ssm_mod.mamba_block(lp["mamba"], cfg, h,
+                                            {"ssm": cache["ssm"], "conv": cache["conv"]},
+                                            decode=True)
+        new_cache.update(ssm=sstate["ssm"], conv=sstate["conv"])
+    else:
+        q, k, v = attn.qkv_proj(ap, cfg, h, positions)
+        a_out = attn.flash_dispatch(q, k, v, causal=True, window=window)
+        s_out, sstate = ssm_mod.mamba_block(lp["mamba"], cfg, h, None, decode=False)
+        new_cache.update(k=k, v=v, ssm=sstate["ssm"], conv=sstate["conv"])
+    B, S = h.shape[0], h.shape[1]
+    s_heads = s_out.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    mixed = 0.5 * (_headnorm(a_out, lp["hy_norm_attn"]) * lp["hy_beta_attn"]
+                   + _headnorm(s_heads, lp["hy_norm_ssm"]) * lp["hy_beta_ssm"])
+    return attn.out_proj(ap, mixed), new_cache
+
+
+# ======================================================================
+# Train / full-sequence forward
+# ======================================================================
+def _embed(params, cfg: ModelConfig, tokens):
+    from repro.dist.sharding import shard
+    return shard(params["embed"][tokens], "batch", "seq", "embed")
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    from repro.dist.sharding import shard
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    policy = None
+    if remat == "block":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward_full(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+                 remat: str = "none", collect_cache: bool = False,
+                 cache_len: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Full-sequence forward for train & prefill.
+
+    Returns (logits, aux_loss, cache_or_None). ``batch`` carries ``tokens``
+    (B, S_text) plus optional ``enc_embeds`` / ``prefix_embeds``.
+    """
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens)
+    if cfg.family == "vlm" and "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+
+    mem_kv = None
+    if cfg.family == "encdec":
+        mem = _encode(params, cfg, batch["enc_embeds"], remat=remat)
+        # memory K/V are per-decoder-layer; computed inside the scan from mem
+    windows = jnp.asarray(layer_windows(cfg)) if cfg.family != "ssm" else None
+
+    aux_total = jnp.zeros((), jnp.float32)
+    cache = None
+
+    if cfg.family == "ssm":
+        def pair_body(carry, lp):
+            h, aux = carry
+            y, ms = ssm_mod.mlstm_block(lp["mlstm"], cfg, apply_norm(cfg, lp["m_norm"], h))
+            h = h + y
+            y, ss = ssm_mod.slstm_block(lp["slstm"], cfg, apply_norm(cfg, lp["s_norm"], h))
+            h = h + y
+            return (h, aux), ((ms, ss) if collect_cache else None)
+        (x, aux_total), ys = jax.lax.scan(_maybe_remat(pair_body, remat), (x, aux_total), params["layers"])
+        logits = _unembed(params, cfg, x)
+        if collect_cache:
+            ms, ss = ys                                # stacked on pair dim
+            cache = {"mlstm": ms, "slstm": ss}
+            return logits, aux_total, cache
+        return logits, aux_total, None
+
+    if cfg.family == "encdec":
+        def dec_body(carry, lp):
+            h, aux = carry
+            hn = apply_norm(cfg, lp["attn_norm"], h)
+            if collect_cache:
+                a, kv = attn.self_attention_prefill(lp["attn"], cfg, hn, positions)
+            else:
+                a = attn.self_attention(lp["attn"], cfg, hn, positions, causal=True)
+                kv = None
+            h = h + a
+            mk, mv = attn.encode_memory(lp["cross"], cfg, mem)
+            c = attn.cross_attention(lp["cross"], cfg, apply_norm(cfg, lp["cross_norm"], h), mk, mv)
+            h = h + c
+            f, a2 = _ffn_apply(lp, cfg, apply_norm(cfg, lp["ffn_norm"], h))
+            return (h + f, aux + a2), ((kv, (mk, mv)) if collect_cache else None)
+        (x, aux_total), ys = jax.lax.scan(_maybe_remat(dec_body, remat), (x, aux_total), params["layers"])
+        logits = _unembed(params, cfg, x)
+        if collect_cache:
+            (k, v), (mk, mv) = ys
+            pad = cache_len - k.shape[2]
+            if pad > 0:
+                padw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+            cache = {"k": k, "v": v, "mem_k": mk, "mem_v": mv}
+        return logits, aux_total, cache
+
+    # decoder-only families (dense / moe / hybrid / vlm)
+    def layer_step(carry, lp, window):
+        h, aux = carry
+        hn = apply_norm(cfg, lp["attn_norm"], h)
+        if cfg.family == "hybrid":
+            a_out, hy_cache = _hymba_mixer(lp, cfg, hn, positions, window)
+            kv = ((hy_cache["k"], hy_cache["v"], hy_cache["ssm"], hy_cache["conv"])
+                  if collect_cache else None)
+        elif collect_cache:
+            a_out, kv = attn.self_attention_prefill(lp["attn"], cfg, hn, positions, window=window)
+        else:
+            a_out = attn.self_attention(lp["attn"], cfg, hn, positions, window=window)
+            kv = None
+        h = h + a_out
+        f, a2 = _ffn_apply(lp, cfg, apply_norm(cfg, lp["ffn_norm"], h))
+        return (h + f, aux + a2), kv
+
+    tmap = jax.tree_util.tree_map
+    w_np = layer_windows(cfg)
+    if len(set(w_np.tolist())) == 1:
+        # uniform window across layers: pass it STATICALLY so the banded
+        # block-skipping attention path applies (see attention.py)
+        w_static = int(w_np[0])
+
+        def layer_body(carry, lp):
+            return layer_step(carry, lp, w_static)
+        (x, aux_total), kv = jax.lax.scan(_maybe_remat(layer_body, remat),
+                                          (x, aux_total), params["layers"])
+    elif cfg.global_every and cfg.n_layers >= cfg.global_every:
+        # periodic local:global pattern (gemma3's 5:1): scan over PERIODS
+        # with the window pattern unrolled statically inside the body, so
+        # the banded path applies to every local layer (§Perf).  Leftover
+        # layers (L % period) run unrolled after the scan.
+        p = cfg.global_every
+        n_per = cfg.n_layers // p
+        pattern = [int(w) for w in w_np[:p]]
+        periods = tmap(lambda a: a[:n_per * p].reshape(n_per, p, *a.shape[1:]),
+                       params["layers"])
+
+        def period_body(carry, lp_period):
+            kvs = []
+            for j in range(p):
+                lp_j = tmap(lambda a, j=j: a[j], lp_period)
+                carry, kv_j = layer_step(carry, lp_j, pattern[j])
+                kvs.append(kv_j)
+            if collect_cache:
+                return carry, tmap(lambda *xs: jnp.stack(xs), *kvs)
+            return carry, None
+
+        (x, aux_total), kv_p = jax.lax.scan(_maybe_remat(period_body, remat),
+                                            (x, aux_total), periods)
+        rem_kvs = []
+        for i in range(n_per * p, cfg.n_layers):
+            lp_i = tmap(lambda a, i=i: a[i], params["layers"])
+            (x, aux_total), kv_i = layer_step((x, aux_total), lp_i, int(w_np[i]))
+            rem_kvs.append(kv_i)
+        if collect_cache:
+            kv = tmap(lambda a: a.reshape(n_per * p, *a.shape[2:]), kv_p)
+            if rem_kvs:
+                kv_r = tmap(lambda *xs: jnp.stack(xs), *rem_kvs)
+                kv = tmap(lambda a, b: jnp.concatenate([a, b], axis=0), kv, kv_r)
+        else:
+            kv = None
+    else:
+        def layer_body(carry, xs):
+            lp, window = xs
+            return layer_step(carry, lp, window)
+        (x, aux_total), kv = jax.lax.scan(_maybe_remat(layer_body, remat),
+                                          (x, aux_total), (params["layers"], windows))
+    logits = _unembed(params, cfg, x)
+    if collect_cache:
+        if cfg.family == "hybrid":
+            k, v, ssm_st, conv_st = kv
+        else:
+            k, v = kv      # (L, B, S, Hkv, dh)
+        pad = cache_len - k.shape[2]
+        if pad > 0:
+            padw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        cache = {"k": k, "v": v}
+        if cfg.family == "hybrid":
+            cache["ssm"], cache["conv"] = ssm_st, conv_st
+    return logits, aux_total, cache
+
+
+def _encode(params, cfg: ModelConfig, enc_embeds, *, remat="none"):
+    """Bidirectional encoder over stub frame embeddings (B, Se, d)."""
+    x = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
+    Se = x.shape[1]
+    positions = jnp.arange(Se)[None, :]
+
+    def enc_body(h, lp):
+        a = attn.self_attention(lp["attn"], cfg, apply_norm(cfg, lp["attn_norm"], h),
+                                positions, causal=False)
+        h = h + a
+        f, _ = _ffn_apply(lp, cfg, apply_norm(cfg, lp["ffn_norm"], h))
+        return h + f, None
+
+    x, _ = jax.lax.scan(_maybe_remat(enc_body, remat), x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+# ======================================================================
+# Decode (single token against cache / state)
+# ======================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Uniform stacked cache pytree for one-token decode."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        n_pairs = L // 2
+        H, dh = cfg.ssm.n_heads, cfg.ssm.head_dim
+        return {
+            "mlstm": {
+                "C": jnp.zeros((n_pairs, batch, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((n_pairs, batch, H, dh), jnp.float32),
+                "m": jnp.full((n_pairs, batch, H), -1e30, jnp.float32),
+            },
+            "slstm": {
+                k: (jnp.full((n_pairs, batch, H, dh), -1e30, jnp.float32) if k == "m"
+                    else jnp.zeros((n_pairs, batch, H, dh), jnp.float32))
+                for k in ("h", "c", "n", "m")
+            },
+        }
+    cache = {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    if cfg.family == "hybrid":
+        H, dh, N = cfg.ssm.n_heads, cfg.ssm.head_dim, cfg.ssm.d_state
+        di = H * dh
+        cache["ssm"] = jnp.zeros((L, batch, H, dh, N), jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch, cfg.ssm.conv_dim - 1, di), jnp.float32)
+    if cfg.family == "encdec":
+        Se = max_len // cfg.enc_len_ratio
+        cache["mem_k"] = jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.head_dim), dtype)
+        cache["mem_v"] = jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return cache
+
+
+def forward_decode(params, cfg: ModelConfig, token, cache, cur_pos):
+    """token: (B, 1) int32; cur_pos: scalar int32. Returns (logits, cache)."""
+    x = _embed(params, cfg, token)
+    windows = jnp.asarray(layer_windows(cfg)) if cfg.family != "ssm" else None
+
+    if cfg.family == "ssm":
+        def pair_body(h, st):
+            y, ms = ssm_mod.mlstm_block(st["p"]["mlstm"], cfg,
+                                        apply_norm(cfg, st["p"]["m_norm"], h),
+                                        st["m_state"], decode=True)
+            h = h + y
+            y, ss = ssm_mod.slstm_block(st["p"]["slstm"], cfg,
+                                        apply_norm(cfg, st["p"]["s_norm"], h),
+                                        st["s_state"], decode=True)
+            return h + y, {"m": ms, "s": ss}
+        def body(h, xs):
+            p, mC, mn, mm, sh_, sc_, sn_, sm_ = xs
+            h, new = pair_body(h, {"p": p,
+                                   "m_state": {"C": mC, "n": mn, "m": mm},
+                                   "s_state": {"h": sh_, "c": sc_, "n": sn_, "m": sm_}})
+            return h, (new["m"]["C"], new["m"]["n"], new["m"]["m"],
+                       new["s"]["h"], new["s"]["c"], new["s"]["n"], new["s"]["m"])
+        ml, sl = cache["mlstm"], cache["slstm"]
+        x, outs = jax.lax.scan(body, x, (params["layers"], ml["C"], ml["n"], ml["m"],
+                                         sl["h"], sl["c"], sl["n"], sl["m"]))
+        new_cache = {"mlstm": {"C": outs[0], "n": outs[1], "m": outs[2]},
+                     "slstm": {"h": outs[3], "c": outs[4], "n": outs[5], "m": outs[6]}}
+        return _unembed(params, cfg, x), new_cache
+
+    if cfg.family == "encdec":
+        def body(h, xs):
+            lp, ck, cv, mk, mv = xs
+            a, (ck, cv) = attn.self_attention_decode(
+                lp["attn"], cfg, apply_norm(cfg, lp["attn_norm"], h), ck, cv, cur_pos)
+            h = h + a
+            c = attn.cross_attention(lp["cross"], cfg,
+                                     apply_norm(cfg, lp["cross_norm"], h), mk, mv)
+            h = h + c
+            f, _ = _ffn_apply(lp, cfg, apply_norm(cfg, lp["ffn_norm"], h))
+            return h + f, (ck, cv)
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"],
+                                             cache["mem_k"], cache["mem_v"]))
+        cache = dict(cache, k=nk, v=nv)
+        return _unembed(params, cfg, x), cache
+
+    if cfg.family == "hybrid":
+        def body(h, xs):
+            lp, ck, cv, cs, cc, window = xs
+            hn = apply_norm(cfg, lp["attn_norm"], h)
+            a_out, nc = _hymba_mixer(lp, cfg, hn, None, window,
+                                     cache={"k": ck, "v": cv, "ssm": cs, "conv": cc},
+                                     cur_pos=cur_pos, decode=True)
+            h = h + a_out
+            f, _ = _ffn_apply(lp, cfg, apply_norm(cfg, lp["ffn_norm"], h))
+            return h + f, (nc["k"], nc["v"], nc["ssm"], nc["conv"])
+        x, outs = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"],
+                                         cache["ssm"], cache["conv"], windows))
+        cache = {"k": outs[0], "v": outs[1], "ssm": outs[2], "conv": outs[3]}
+        return _unembed(params, cfg, x), cache
+
+    def body(h, xs):
+        lp, ck, cv, window = xs
+        a, (ck, cv) = attn.self_attention_decode(
+            lp["attn"], cfg, apply_norm(cfg, lp["attn_norm"], h), ck, cv, cur_pos,
+            window=window)
+        h = h + a
+        f, _ = _ffn_apply(lp, cfg, apply_norm(cfg, lp["ffn_norm"], h))
+        return h + f, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"], windows))
+    cache = dict(cache, k=nk, v=nv)
+    return _unembed(params, cfg, x), cache
+
+
+# ======================================================================
+# Loss
+# ======================================================================
+def lm_loss(logits, labels, vocab_size: int):
+    """Mean token cross-entropy; labels < 0 are masked.
+
+    Written without gathers along the vocab dim so vocab-TP logits never
+    get all-gathered: the gold logit is an elementwise select-and-reduce
+    over the sharded axis (partial sums + a scalar-ish all-reduce).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (vocab_iota == jnp.maximum(labels, 0)[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,63 @@
+"""AdamW with bf16 params + fp32 moments, global-norm clipping, and a
+cosine-with-warmup schedule. Written against raw pytrees (no optax dep)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def init_moments(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params)}
+
+
+def lr_schedule(tc: TrainConfig, step):
+    step = step.astype(jnp.float32)
+    warm = tc.learning_rate * (step + 1) / max(tc.warmup_steps, 1)
+    prog = jnp.clip((step - tc.warmup_steps) /
+                    max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * tc.learning_rate * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < tc.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, moments, step, tc: TrainConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+    lr = lr_schedule(tc, step)
+    b1, b2 = tc.beta1, tc.beta2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, moments["m"], moments["v"])
+    new_p = jax.tree_util.tree_map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,106 @@
+"""train_step / serve_step factories (the functions the dry-run lowers).
+
+``make_train_step(cfg, tc)`` returns ``step(state, batch) -> (state, metrics)``
+with AdamW, remat, optional microbatch gradient accumulation and gradient
+compression. ``make_prefill_step`` / ``make_decode_step`` are the serving
+counterparts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.inputs import prefix_len
+from repro.models.transformer import forward_decode, forward_full, lm_loss
+from repro.optim import adamw, compression
+
+
+def init_train_state(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    from repro.models.transformer import init_params
+    params = init_params(rng, cfg)
+    state = {
+        "params": params,
+        "opt": adamw.init_moments(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: str = "none"):
+    logits, aux, _ = forward_full(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    # next-token shift: predict labels[t] from logits[t-1]; here labels are
+    # pre-shifted by the pipeline, so align lengths only (VLM prefix).
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]
+    loss = lm_loss(logits, labels, cfg.padded_vocab)
+    return loss + 0.01 * aux, (loss, aux)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    def lf(p, b):
+        return loss_fn(p, cfg, b, remat=tc.remat)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if tc.microbatches > 1:
+            def micro(batch_slice):
+                return jax.grad(lf, has_aux=True)(params, batch_slice)
+
+            def split(x):
+                b = x.shape[0]
+                mb = tc.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            mb_batch = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, bslice):
+                g_acc, l_acc, a_acc = carry
+                g, (l, a) = micro(bslice)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())), mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / tc.microbatches, grads)
+            loss, aux = loss / tc.microbatches, aux / tc.microbatches
+        else:
+            grads, (loss, aux) = jax.grad(lf, has_aux=True)(params, batch)
+
+        efb = state.get("error_fb")
+        grads, efb = compression.compress_grads(grads, tc.grad_compression, efb)
+        new_params, new_opt, om = adamw.adamw_update(
+            params, grads, state["opt"], state["step"], tc)
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        if efb is not None:
+            new_state["error_fb"] = efb
+        metrics = {"loss": loss, "aux_loss": aux, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        logits, _, cache = forward_full(params, cfg, batch, collect_cache=True,
+                                        cache_len=cache_len)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, cur_pos):
+        logits, cache = forward_decode(params, cfg, token, cache, cur_pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step

@@ -1,0 +1,53 @@
+"""The paper's 17 benchmark applications (Table IV) as traceable JAX programs.
+
+Every workload module exposes ``build(scale=1) -> (fn, args)`` with
+deterministic inputs; ``fn(*args)`` must trace through the Eva-CiM VM
+(``repro.core.trace_program``).  Sizes are chosen so a full trace lands in
+the 10^4–10^5 instruction range — the same order as the paper's LCS
+validation trace ("around 3000 instructions") scaled to exercise the cache
+hierarchy.  Documented kernel reductions (DESIGN.md §2): M2D -> IDCT +
+motion compensation; h264ref -> SAD motion search; mcf -> Bellman-Ford
+edge relaxation on the min-cost network; hmmer -> Viterbi recursion.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.workloads import graph, ml, spec, strings, media
+
+WORKLOADS: Dict[str, Callable] = {
+    # machine learning
+    "NB": ml.build_nb,
+    "DT": ml.build_dt,
+    "SVM": ml.build_svm,
+    "LiR": ml.build_lir,
+    "KM": ml.build_km,
+    # string processing
+    "LCS": strings.build_lcs,
+    # multimedia
+    "M2D": media.build_m2d,
+    # graph processing
+    "BFS": graph.build_bfs,
+    "DFS": graph.build_dfs,
+    "BC": graph.build_bc,
+    "SSSP": graph.build_sssp,
+    "CCOMP": graph.build_ccomp,
+    "PRANK": graph.build_prank,
+    # SPEC 2006 kernels
+    "astar": spec.build_astar,
+    "h264ref": spec.build_h264ref,
+    "hmmer": spec.build_hmmer,
+    "mcf": spec.build_mcf,
+}
+
+CATEGORY = {
+    "NB": "ml", "DT": "ml", "SVM": "ml", "LiR": "ml", "KM": "ml",
+    "LCS": "string", "M2D": "media",
+    "BFS": "graph", "DFS": "graph", "BC": "graph", "SSSP": "graph",
+    "CCOMP": "graph", "PRANK": "graph",
+    "astar": "spec", "h264ref": "spec", "hmmer": "spec", "mcf": "spec",
+}
+
+
+def build(name: str, scale: int = 1):
+    return WORKLOADS[name](scale)

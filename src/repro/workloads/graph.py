@@ -1,0 +1,201 @@
+"""Graph-processing benchmarks (Table IV): BFS, DFS, BC, SSSP, CCOMP, PRANK.
+
+Graphs are small deterministic Erdős–Rényi instances; dense adjacency for
+the level-synchronous algorithms (bitwise and/or — the CiM-native form) and
+edge lists for the pointer-chasing ones (DFS, mcf-style relaxation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = 10 ** 6
+
+
+def _graph(n: int, p: float, seed: int, weighted: bool = False):
+    r = np.random.default_rng(seed)
+    adj = (r.random((n, n)) < p).astype(np.int32)
+    np.fill_diagonal(adj, 0)
+    adj = np.maximum(adj, adj.T)                       # undirected
+    if weighted:
+        w = r.integers(1, 16, (n, n)).astype(np.int32)
+        w = np.where(adj > 0, w, INF)
+        np.fill_diagonal(w, 0)
+        return adj, w
+    return adj
+
+
+# ----------------------------------------------------------------- BFS
+def build_bfs(scale: int = 1):
+    """Level-synchronous BFS over a boolean frontier: next = (adj AND
+    frontier) OR-reduced, masked by ~visited — pure bitwise CiM ops."""
+    n = 20 * scale
+    adj = jnp.asarray(_graph(n, 0.15, 7))
+
+    def bfs(adj):
+        frontier0 = jnp.zeros((n,), jnp.int32).at[0].set(1)
+        visited0 = frontier0
+        depth0 = jnp.full((n,), -1, jnp.int32).at[0].set(0)
+
+        def step(state, d):
+            frontier, visited, depth = state
+            reach = jnp.sum(adj & frontier[:, None], axis=0)   # and + or-like add
+            nxt = ((reach > 0).astype(jnp.int32)) & (1 - visited)
+            visited = visited | nxt
+            depth = jnp.where((nxt > 0) & (depth < 0), d + 1, depth)
+            return (nxt, visited, depth), None
+
+        (f, v, depth), _ = jax.lax.scan(step, (frontier0, visited0, depth0),
+                                        jnp.arange(8, dtype=jnp.int32))
+        return depth, jnp.sum(v)
+
+    return bfs, (adj,)
+
+
+# ----------------------------------------------------------------- DFS
+def build_dfs(scale: int = 1):
+    """Iterative DFS with an explicit stack (pointer chasing: gathers and
+    dynamic stack updates — the paper's least CiM-favorable pattern)."""
+    n = 12 * scale
+    adj = np.asarray(_graph(n, 0.2, 8))
+    # padded adjacency lists
+    deg = adj.sum(1)
+    max_deg = int(deg.max())
+    nbrs = np.full((n, max_deg), -1, np.int32)
+    for u in range(n):
+        vs = np.nonzero(adj[u])[0]
+        nbrs[u, :len(vs)] = vs
+    nbrs = jnp.asarray(nbrs)
+
+    def dfs(nbrs):
+        stack0 = jnp.full((4 * n,), -1, jnp.int32).at[0].set(0)
+        state0 = (stack0, jnp.int32(1), jnp.zeros((n,), jnp.int32),
+                  jnp.int32(0))
+
+        def cond(s):
+            return s[1] > 0
+
+        def body(s):
+            stack, top, visited, order = s
+            u = stack[top - 1]
+            top = top - 1
+            seen = visited[u] > 0
+            visited = visited.at[u].set(1)
+            order = order + jnp.where(seen, 0, 1)
+
+            def push(carry, v):
+                stack, top = carry
+                ok = (v >= 0) & (visited[v] == 0) & ~seen
+                stack = jax.lax.dynamic_update_slice(
+                    stack, jnp.where(ok, v, stack[top])[None], (top,))
+                return (stack, top + ok.astype(jnp.int32)), None
+            (stack, top), _ = jax.lax.scan(push, (stack, top), nbrs[u])
+            return (stack, top, visited, order)
+
+        stack, top, visited, order = jax.lax.while_loop(cond, body, state0)
+        return order, visited
+
+    return dfs, (nbrs,)
+
+
+# ----------------------------------------------------------------- BC
+def build_bc(scale: int = 1):
+    """Betweenness centrality (Brandes, single source): BFS counting
+    shortest paths, then reverse dependency accumulation (float div/mul)."""
+    n = 10 * scale
+    adj_np = _graph(n, 0.25, 9)
+    adj = jnp.asarray(adj_np)
+    MAXD = 6
+
+    def bc(adj):
+        adjf = adj.astype(jnp.float32)
+        dist0 = jnp.full((n,), -1, jnp.int32).at[0].set(0)
+        sigma0 = jnp.zeros((n,), jnp.float32).at[0].set(1.0)
+
+        def fwd(state, d):
+            dist, sigma = state
+            frontier = (dist == d).astype(jnp.float32)
+            contrib = adjf.T @ (sigma * frontier)          # path counts
+            new = (dist < 0) & (contrib > 0)
+            dist = jnp.where(new, d + 1, dist)
+            sigma = sigma + jnp.where(new, contrib, 0.0)
+            return (dist, sigma), None
+        (dist, sigma), _ = jax.lax.scan(fwd, (dist0, sigma0),
+                                        jnp.arange(MAXD, dtype=jnp.int32))
+
+        delta0 = jnp.zeros((n,), jnp.float32)
+
+        def bwd(delta, d_rev):
+            d = MAXD - 1 - d_rev
+            on_level = (dist == (d + 1)).astype(jnp.float32)
+            coeff = jnp.where(sigma > 0, (1.0 + delta) / jnp.maximum(sigma, 1e-9), 0.0)
+            pred_mask = (dist == d).astype(jnp.float32)
+            acc = adjf @ (coeff * on_level)
+            delta = delta + pred_mask * sigma * acc
+            return delta, None
+        delta, _ = jax.lax.scan(bwd, delta0, jnp.arange(MAXD, dtype=jnp.int32))
+        return delta
+
+    return bc, (adj,)
+
+
+# ----------------------------------------------------------------- SSSP
+def build_sssp(scale: int = 1):
+    """Bellman-Ford via min-plus relaxation (integer add + min: the
+    CiM-supported op pair — paper reports SSSP among the higher MACRs)."""
+    n = 14 * scale
+    _, w = _graph(n, 0.25, 10, weighted=True)
+    w = jnp.asarray(w)
+
+    def sssp(w):
+        dist0 = jnp.full((n,), INF, jnp.int32).at[0].set(0)
+
+        def relax(dist, _):
+            cand = jnp.min(dist[:, None] + w, axis=0)      # add + min chains
+            return jnp.minimum(dist, cand), None
+        dist, _ = jax.lax.scan(relax, dist0, None, length=6)
+        return dist
+
+    return sssp, (w,)
+
+
+# ----------------------------------------------------------------- CCOMP
+def build_ccomp(scale: int = 1):
+    """Connected components by label propagation (integer min over
+    neighbors)."""
+    n = 20 * scale
+    adj = jnp.asarray(_graph(n, 0.08, 11))
+
+    def ccomp(adj):
+        labels0 = jnp.arange(n, dtype=jnp.int32)
+        big = jnp.int32(INF)
+
+        def prop(labels, _):
+            nbr = jnp.where(adj > 0, labels[None, :], big)
+            best = jnp.min(nbr, axis=1)
+            return jnp.minimum(labels, best), None
+        labels, _ = jax.lax.scan(prop, labels0, None, length=6)
+        return labels
+
+    return ccomp, (adj,)
+
+
+# ----------------------------------------------------------------- PRANK
+def build_prank(scale: int = 1):
+    """PageRank power iteration (float mul/add matvec + damping)."""
+    n = 14 * scale
+    adj_np = _graph(n, 0.2, 12)
+    deg = np.maximum(adj_np.sum(1), 1)
+    P = (adj_np / deg[:, None]).astype(np.float32)
+    P = jnp.asarray(P)
+
+    def prank(P):
+        r0 = jnp.full((n,), 1.0 / n, jnp.float32)
+
+        def it(rv, _):
+            rv2 = 0.85 * (P.T @ rv) + 0.15 / n
+            return rv2, jnp.sum(jnp.abs(rv2 - rv))
+        rv, deltas = jax.lax.scan(it, r0, None, length=5)
+        return rv, deltas
+
+    return prank, (P,)

@@ -1,0 +1,39 @@
+"""Multimedia (Table IV): MPEG-2 decode core — 8x8 inverse DCT + motion
+compensation (documented kernel reduction, DESIGN.md §2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _idct_matrix() -> np.ndarray:
+    n = 8
+    C = np.zeros((n, n), np.float32)
+    for k in range(n):
+        for i in range(n):
+            a = np.sqrt(1.0 / n) if k == 0 else np.sqrt(2.0 / n)
+            C[k, i] = a * np.cos((2 * i + 1) * k * np.pi / (2 * n))
+    return C
+
+
+def build_m2d(scale: int = 1):
+    """Per 8x8 block: dequant (int mul), 2D IDCT (two 8x8 matmuls),
+    motion compensation (reference block add), saturate to [0, 255]."""
+    r = np.random.default_rng(6)
+    B = 2 * scale                                   # blocks
+    coeffs = jnp.asarray(r.integers(-32, 32, (B, 8, 8)), jnp.int32)
+    quant = jnp.asarray(r.integers(1, 8, (8, 8)), jnp.int32)
+    ref = jnp.asarray(r.integers(0, 255, (B, 8, 8)), jnp.int32)
+    C = jnp.asarray(_idct_matrix())
+
+    def m2d(coeffs, quant, ref):
+        def one_block(cf, rf):
+            deq = (cf * quant).astype(jnp.float32)
+            pix = C.T @ deq @ C                       # 2D IDCT
+            out = pix.astype(jnp.int32) + rf          # motion compensation
+            return jnp.clip(out, 0, 255)
+        blocks = jax.vmap(one_block)(coeffs, ref)
+        return blocks, jnp.sum(blocks)
+
+    return m2d, (coeffs, quant, ref)

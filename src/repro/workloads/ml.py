@@ -1,0 +1,127 @@
+"""Machine-learning benchmarks (paper Table IV): NB, DT, SVM, LiR, KM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------- NB
+def build_nb(scale: int = 1):
+    """Categorical naive Bayes inference: integer log-likelihood table
+    lookups accumulated per class (gather + add chains)."""
+    r = _rng(0)
+    N, F, C, V = 8 * scale, 8, 4, 4
+    x = jnp.asarray(r.integers(0, V, (N, F)), jnp.int32)
+    # fixed-point log-likelihoods (scaled ints — integer adds are CiM ops)
+    table = jnp.asarray(r.integers(-64, 0, (C, F, V)), jnp.int32)
+    prior = jnp.asarray(r.integers(-16, 0, (C,)), jnp.int32)
+
+    def nb(x, table, prior):
+        def score_one(xi):
+            def per_class(c_tab):
+                # sum_f table[f, x_f]
+                vals = jax.vmap(lambda t, xf: t[xf])(c_tab, xi)
+                return jnp.sum(vals)
+            scores = jax.vmap(per_class)(table) + prior
+            return jnp.argmax(scores)
+        return jax.vmap(score_one)(x)
+
+    return nb, (x, table, prior)
+
+
+# ----------------------------------------------------------------- DT
+def build_dt(scale: int = 1):
+    """Decision-tree inference: depth-8 complete tree walked per sample
+    (gather feature -> compare threshold -> branch index arithmetic)."""
+    r = _rng(1)
+    N, F, DEPTH = 16 * scale, 8, 8
+    n_nodes = 2 ** DEPTH
+    x = jnp.asarray(r.integers(0, 256, (N, F)), jnp.int32)
+    feat = jnp.asarray(r.integers(0, F, (n_nodes,)), jnp.int32)
+    thresh = jnp.asarray(r.integers(0, 256, (n_nodes,)), jnp.int32)
+
+    def dt(x, feat, thresh):
+        def walk(xi):
+            def step(node, _):
+                f = feat[node]
+                t = thresh[node]
+                go_right = xi[f] > t
+                node = 2 * node + 1 + go_right.astype(jnp.int32)
+                node = jnp.minimum(node, n_nodes - 1)
+                return node, None
+            leaf, _ = jax.lax.scan(step, jnp.int32(0), None, length=DEPTH)
+            return leaf & 1                          # class = leaf parity
+        return jax.vmap(walk)(x)
+
+    return dt, (x, feat, thresh)
+
+
+# ----------------------------------------------------------------- SVM
+def build_svm(scale: int = 1):
+    """Linear SVM: inference scores + one hinge-loss subgradient step."""
+    r = _rng(2)
+    N, F = 12 * scale, 12
+    X = jnp.asarray(r.normal(size=(N, F)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], N), jnp.float32)
+    w = jnp.asarray(r.normal(size=(F,)) * 0.1, jnp.float32)
+
+    def svm(X, y, w):
+        scores = X @ w                                  # (N,)
+        margin = y * scores
+        active = (margin < 1.0).astype(jnp.float32)     # hinge subgradient
+        grad = -(X.T @ (active * y)) / N + 0.01 * w
+        w2 = w - 0.1 * grad
+        preds = jnp.sign(X @ w2)
+        acc_n = jnp.sum((preds == y).astype(jnp.int32))
+        return w2, acc_n
+
+    return svm, (X, y, w)
+
+
+# ----------------------------------------------------------------- LiR
+def build_lir(scale: int = 1):
+    """Linear regression: 4 full-batch gradient-descent steps."""
+    r = _rng(3)
+    N, F, STEPS = 12 * scale, 8, 4
+    X = jnp.asarray(r.normal(size=(N, F)), jnp.float32)
+    yv = jnp.asarray(r.normal(size=(N,)), jnp.float32)
+    w0 = jnp.zeros((F,), jnp.float32)
+
+    def lir(X, yv, w0):
+        def step(w, _):
+            err = X @ w - yv
+            grad = X.T @ err / N
+            return w - 0.05 * grad, jnp.sum(err * err)
+        w, losses = jax.lax.scan(step, w0, None, length=STEPS)
+        return w, losses
+
+    return lir, (X, yv, w0)
+
+
+# ----------------------------------------------------------------- KM
+def build_km(scale: int = 1):
+    """K-means: 3 Lloyd iterations (distances, argmin, centroid update)."""
+    r = _rng(4)
+    N, D, K, ITERS = 24 * scale, 4, 4, 3
+    pts = jnp.asarray(r.normal(size=(N, D)), jnp.float32)
+    cent0 = jnp.asarray(r.normal(size=(K, D)), jnp.float32)
+
+    def km(pts, cent0):
+        def lloyd(cent, _):
+            diff = pts[:, None, :] - cent[None, :, :]    # (N,K,D) sub
+            d2 = jnp.sum(diff * diff, axis=-1)           # mul + add chains
+            assign = jnp.argmin(d2, axis=-1)             # (N,)
+            onehot = (assign[:, None] == jnp.arange(K)[None, :]).astype(jnp.float32)
+            counts = jnp.sum(onehot, axis=0)             # (K,)
+            sums = onehot.T @ pts                        # (K,D)
+            new = sums / jnp.maximum(counts, 1.0)[:, None]
+            return new, jnp.sum(d2 * onehot)
+        cent, inertia = jax.lax.scan(lloyd, cent0, None, length=ITERS)
+        return cent, inertia
+
+    return km, (pts, cent0)

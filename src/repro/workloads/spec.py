@@ -1,0 +1,128 @@
+"""SPEC 2006 kernels (Table IV): astar, h264ref, hmmer, mcf — each reduced
+to its documented hot loop (DESIGN.md §2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = 10 ** 6
+
+
+# ---------------------------------------------------------------- astar
+def build_astar(scale: int = 1):
+    """Grid A*: open-set relaxation with f = g + h (Manhattan heuristic).
+    argmin open-node select + neighbor relax per step."""
+    r = np.random.default_rng(13)
+    n = 8 * scale
+    cost = jnp.asarray(r.integers(1, 8, (n, n)), jnp.int32)
+    STEPS = 3 * n
+
+    def astar(cost):
+        N = n * n
+        gx = jnp.arange(N, dtype=jnp.int32) // n
+        gy = jnp.arange(N, dtype=jnp.int32) % n
+        h = (n - 1 - gx) + (n - 1 - gy)                  # Manhattan to corner
+        g0 = jnp.full((N,), INF, jnp.int32).at[0].set(0)
+        open0 = jnp.zeros((N,), jnp.int32).at[0].set(1)
+        closed0 = jnp.zeros((N,), jnp.int32)
+
+        def step(state, _):
+            g, open_, closed = state
+            f = jnp.where(open_ > 0, g + h, INF)
+            u = jnp.argmin(f)                            # cheapest open node
+            open_ = open_.at[u].set(0)
+            closed = closed.at[u].set(1)
+            ux, uy = u // n, u % n
+            for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                vx, vy = ux + dx, uy + dy
+                ok = (vx >= 0) & (vx < n) & (vy >= 0) & (vy < n)
+                v = jnp.clip(vx * n + vy, 0, N - 1)
+                cand = g[u] + cost[jnp.clip(vx, 0, n - 1), jnp.clip(vy, 0, n - 1)]
+                better = ok & (cand < g[v]) & (closed[v] == 0)
+                g = g.at[v].set(jnp.where(better, cand, g[v]))
+                open_ = open_.at[v].set(jnp.where(better, 1, open_[v]))
+            return (g, open_, closed), None
+
+        (g, open_, closed), _ = jax.lax.scan(step, (g0, open0, closed0),
+                                             None, length=STEPS)
+        return g[N - 1], g
+
+    return astar, (cost,)
+
+
+# -------------------------------------------------------------- h264ref
+def build_h264ref(scale: int = 1):
+    """Motion-estimation SAD search: sum of absolute differences of the
+    current 8x8 block against every candidate in a search window (integer
+    sub/abs/add chains — the encoder's dominant kernel)."""
+    r = np.random.default_rng(14)
+    B, W = 8, 6 * scale                                 # block, window
+    cur = jnp.asarray(r.integers(0, 255, (B, B)), jnp.int32)
+    ref = jnp.asarray(r.integers(0, 255, (B + W, B + W)), jnp.int32)
+
+    def h264(cur, ref):
+        def sad_at(dy, dx):
+            win = jax.lax.dynamic_slice(ref, (dy, dx), (B, B))
+            return jnp.sum(jnp.abs(win - cur))
+        offs = jnp.arange(W, dtype=jnp.int32)
+        sads = jax.vmap(lambda dy: jax.vmap(lambda dx: sad_at(dy, dx))(offs))(offs)
+        best = jnp.argmin(sads.reshape(-1))
+        return best, sads
+
+    return h264, (cur, ref)
+
+
+# ---------------------------------------------------------------- hmmer
+def build_hmmer(scale: int = 1):
+    """Viterbi recursion of a profile HMM (hmmsearch's P7Viterbi core):
+    dp[t,j] = emit[j,obs_t] + max_i(dp[t-1,i] + trans[i,j]) — integer
+    add/max in fixed-point, exactly the CiM-supported pair."""
+    r = np.random.default_rng(15)
+    M, T, A = 8 * scale, 16, 4                         # states, seq len, alphabet
+    obs = jnp.asarray(r.integers(0, A, (T,)), jnp.int32)
+    emit = jnp.asarray(r.integers(-32, 0, (M, A)), jnp.int32)
+    trans = jnp.asarray(r.integers(-16, 0, (M, M)), jnp.int32)
+
+    def hmmer(obs, emit, trans):
+        dp0 = emit[:, obs[0]]
+
+        def step(dp, o_t):
+            cand = dp[:, None] + trans                  # (M, M) adds
+            best = jnp.max(cand, axis=0)                # max chains
+            dp2 = best + emit[:, o_t]
+            return dp2, jnp.max(dp2)
+        dp, path_scores = jax.lax.scan(step, dp0, obs[1:])
+        return jnp.max(dp), path_scores
+
+    return hmmer, (obs, emit, trans)
+
+
+# ------------------------------------------------------------------ mcf
+def build_mcf(scale: int = 1):
+    """Min-cost-flow price update core (simplified SPFA/Bellman-Ford over
+    the residual network's edge list): gather endpoints, relax, scatter —
+    pointer-heavy like the real mcf."""
+    r = np.random.default_rng(16)
+    n, m = 12 * scale, 36 * scale
+    src = jnp.asarray(r.integers(0, n, (m,)), jnp.int32)
+    dst = jnp.asarray(r.integers(0, n, (m,)), jnp.int32)
+    w = jnp.asarray(r.integers(1, 10, (m,)), jnp.int32)
+
+    def mcf(src, dst, w):
+        dist0 = jnp.full((n,), INF, jnp.int32).at[0].set(0)
+
+        def relax_round(dist, _):
+            def relax_edge(d, e):
+                s, t, we = e
+                cand = d[s] + we
+                better = cand < d[t]
+                d = d.at[t].set(jnp.where(better, cand, d[t]))
+                return d, better.astype(jnp.int32)
+            dist, improved = jax.lax.scan(relax_edge, dist,
+                                          (src, dst, w))
+            return dist, jnp.sum(improved)
+        dist, improvements = jax.lax.scan(relax_round, dist0, None, length=4)
+        return dist, improvements
+
+    return mcf, (src, dst, w)

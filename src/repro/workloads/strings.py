@@ -1,0 +1,40 @@
+"""String processing (Table IV): longest common subsequence — the paper's
+validation workload (§VI-A compares offload counts on LCS against [23])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_lcs(scale: int = 1):
+    """Classic O(n*m) DP:  dp[i,j] = a_i==b_j ? dp[i-1,j-1]+1
+                                              : max(dp[i-1,j], dp[i,j-1]).
+
+    Integer adds / max / compares over the DP row — the canonical
+    Load-Load-OP-Store workload."""
+    r = np.random.default_rng(5)
+    n = m = 24 * scale
+    a = jnp.asarray(r.integers(0, 4, (n,)), jnp.int32)
+    b = jnp.asarray(r.integers(0, 4, (m,)), jnp.int32)
+
+    def lcs(a, b):
+        row0 = jnp.zeros((m + 1,), jnp.int32)
+
+        def outer(prev_row, ai):
+            def inner(carry, j):
+                left = carry                       # dp[i, j-1]
+                up = prev_row[j]                   # dp[i-1, j]
+                diag = prev_row[j - 1]             # dp[i-1, j-1]
+                match = (ai == b[j - 1]).astype(jnp.int32)
+                val = jnp.maximum(jnp.maximum(up, left), diag + match)
+                return val, val
+            _, tail = jax.lax.scan(inner, jnp.int32(0),
+                                   jnp.arange(1, m + 1, dtype=jnp.int32))
+            row = jnp.concatenate([jnp.zeros((1,), jnp.int32), tail])
+            return row, None
+
+        final, _ = jax.lax.scan(outer, row0, a)
+        return final[m]
+
+    return lcs, (a, b)

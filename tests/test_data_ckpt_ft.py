@@ -1,0 +1,121 @@
+"""Data pipeline determinism/seekability, checkpoint atomicity + resume,
+fault-tolerant runner recovery, straggler monitor."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   load_checkpoint, save_checkpoint)
+from repro.data.pipeline import (DataConfig, ShardedTokenPipeline,
+                                 write_synthetic_corpus)
+from repro.ft.manager import FaultTolerantRunner, StragglerMonitor
+
+
+# ------------------------------------------------------------------- data
+def test_pipeline_pure_in_step():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+    p1, p2 = ShardedTokenPipeline(cfg), ShardedTokenPipeline(cfg)
+    for step in (0, 7, 123):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(0)["tokens"],
+                              p1.batch_at(1)["tokens"])
+
+
+def test_pipeline_labels_shifted():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    b = ShardedTokenPipeline(cfg).batch_at(3)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+
+
+def test_corpus_host_sharding(tmp_path):
+    write_synthetic_corpus(str(tmp_path), vocab_size=50, n_tokens=4000,
+                           n_shards=4)
+    cfgs = [DataConfig(vocab_size=50, seq_len=8, global_batch=4,
+                       corpus_dir=str(tmp_path), host_id=h, num_hosts=2)
+            for h in range(2)]
+    pipes = [ShardedTokenPipeline(c) for c in cfgs]
+    b0, b1 = pipes[0].batch_at(5), pipes[1].batch_at(5)
+    assert b0["tokens"].shape == (2, 8)             # host slice of global 4
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ------------------------------------------------------------------- ckpt
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v, jnp.bfloat16)},
+            "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    s = _state(3.0)
+    path = save_checkpoint(str(tmp_path), 7, s)
+    got = load_checkpoint(path, jax.tree_util.tree_map(np.asarray, _state()))
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"], np.float32),
+                                  np.full((4, 4), 3.0, np.float32))
+    assert int(got["step"]) == 3
+
+
+def test_no_tmp_files_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _state())
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+def test_manager_retention_and_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    for s in range(5):
+        mgr.maybe_save(s, _state(float(s)))
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 4
+    files = sorted(pathlib.Path(tmp_path).glob("*.npz"))
+    assert len(files) == 2                           # retention
+    step, got = mgr.restore_latest(_state())
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(got["params"]["w"], np.float32), 4.0)
+
+
+# --------------------------------------------------------------------- ft
+def test_runner_recovers_from_injected_failure(tmp_path):
+    calls = []
+
+    def step_fn(state, batch):
+        s = dict(state, step=state["step"] + 1)
+        calls.append(int(state["step"]))
+        return s, {"loss": 1.0 / (1 + float(state["step"]))}
+
+    runner = FaultTolerantRunner(str(tmp_path), save_every=3)
+    state = {"step": jnp.asarray(0, jnp.int32)}
+    final, report = runner.run(state, 12, step_fn, lambda i: None,
+                               log_every=0, fail_at=7)
+    assert report.failures_recovered == 1
+    assert int(final["step"]) == 12
+    # resumed from the last checkpoint before the failure (step 6)
+    assert 6 in calls or 7 in calls
+
+
+def test_runner_auto_resume_fresh_process(tmp_path):
+    def step_fn(state, batch):
+        return dict(state, step=state["step"] + 1), {"x": 0.0}
+
+    r1 = FaultTolerantRunner(str(tmp_path), save_every=2)
+    s, _ = r1.run({"step": jnp.asarray(0, jnp.int32)}, 6, step_fn,
+                  lambda i: None, log_every=0)
+    # second runner: resumes, runs only the remaining steps
+    r2 = FaultTolerantRunner(str(tmp_path), save_every=2)
+    s2, rep = r2.run({"step": jnp.asarray(0, jnp.int32)}, 10, step_fn,
+                     lambda i: None, log_every=0)
+    assert rep.resumed_from == 5
+    assert int(s2["step"]) == 10
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(window=16, threshold=2.0)
+    flagged = []
+    for i in range(20):
+        t = 0.1 if i != 15 else 0.5
+        if m.observe(i, t):
+            flagged.append(i)
+    assert flagged == [15]
+    assert m.report()["n_straggles"] == 1

@@ -1,0 +1,99 @@
+"""Device model (Table III + Fig. 11) and system profiler invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CIM_SET_STT, FEFET, L1_64K, L2_256K, L1_32K, L2_2M,
+                        OffloadConfig, SRAM, profile_system, trace_program)
+from repro.core.cache import CacheConfig
+from repro.core.device_model import TECHS
+
+
+# --------------------------------------------------------------- Table III
+TABLE3 = {
+    ("sram", "L1"): {"read": 61.0, "CiM-OR": 71.0, "CiM-AND": 72.0,
+                     "CiM-XOR": 79.0, "CiM-ADD": 79.0},
+    ("sram", "L2"): {"read": 314.0, "CiM-OR": 341.0, "CiM-AND": 344.0,
+                     "CiM-XOR": 365.0, "CiM-ADD": 365.0},
+    ("fefet", "L1"): {"read": 34.0, "CiM-OR": 35.0, "CiM-AND": 88.0,
+                      "CiM-XOR": 105.0, "CiM-ADD": 105.0},
+    ("fefet", "L2"): {"read": 70.0, "CiM-OR": 72.0, "CiM-AND": 146.0,
+                      "CiM-XOR": 205.0, "CiM-ADD": 205.0},
+}
+
+
+@pytest.mark.parametrize("tech", ["sram", "fefet"])
+@pytest.mark.parametrize("level,cfg", [("L1", L1_64K), ("L2", L2_256K)])
+def test_table3_reproduced_exactly(tech, level, cfg):
+    """The scaling law must pass through the published anchors verbatim."""
+    got = TECHS[tech].table3_row(cfg)
+    for op, exp in TABLE3[(tech, level)].items():
+        assert abs(got[op] - exp) < 0.51, (tech, level, op, got[op], exp)
+
+
+def test_scaling_monotonic_in_size():
+    """Paper finding (iii): larger arrays -> higher per-op CiM energy."""
+    for tech in TECHS.values():
+        for op in ("read", "CiM-ADD", "CiM-XOR"):
+            sizes = [32 * 1024, 64 * 1024, 256 * 1024, 2 * 1024 * 1024]
+            es = [tech.energy(op, CacheConfig("LX", s, 4)) for s in sizes]
+            assert all(a < b for a, b in zip(es, es[1:])), (tech.tech, op, es)
+
+
+def test_fig11_latency_relations():
+    assert SRAM.latency("CiM-OR", "L1") == SRAM.latency("read", "L1")
+    assert SRAM.latency("CiM-ADD", "L1") == SRAM.latency("read", "L1") + 4
+    for op in ("read", "CiM-OR", "CiM-ADD"):
+        assert FEFET.latency(op, "L2") <= SRAM.latency(op, "L2")
+
+
+# --------------------------------------------------------------- profiler
+def _trace():
+    a = jnp.arange(128, dtype=jnp.int32)
+    b = jnp.arange(128, dtype=jnp.int32) * 3
+    return trace_program(lambda a, b: jnp.sum((a + b) ^ b), a, b)
+
+
+def test_profiler_accounting_consistency():
+    tr = _trace()
+    rep = profile_system(tr)
+    for eb in (rep.base, rep.cim):
+        assert eb.total == pytest.approx(eb.processor + eb.caches)
+        assert eb.total_with_dram == pytest.approx(eb.total + eb.dram)
+    assert rep.base_cycles > 0 and rep.cim_cycles > 0
+    assert 0.0 <= rep.macr <= 1.0
+    assert rep.macr == pytest.approx(rep.macr_l1 + rep.macr_other)
+    # Table VI ratio rows sum to 1 by construction
+    assert rep.processor_ratio + rep.cache_ratio == pytest.approx(1.0)
+
+
+def test_cim_beneficial_on_bitwise_program():
+    rep = profile_system(_trace())
+    assert rep.energy_improvement > 1.0
+    assert rep.speedup > 1.0
+    assert rep.n_cim_ops > 0
+
+
+def test_empty_cimset_is_identity():
+    tr = _trace()
+    rep = profile_system(tr, OffloadConfig(cim_set=frozenset()))
+    assert rep.n_cim_ops == 0
+    assert rep.energy_improvement == pytest.approx(1.0)
+    assert rep.speedup == pytest.approx(1.0)
+
+
+def test_l2_only_not_better_than_both():
+    """Paper §VI-D: L2-only CiM gives lower improvement than L1(+L2)."""
+    tr = _trace()
+    both = profile_system(tr, OffloadConfig(cim_levels=("L1", "L2")))
+    l2 = profile_system(tr, OffloadConfig(cim_levels=("L2",)))
+    assert l2.energy_improvement <= both.energy_improvement + 1e-9
+
+
+def test_techs_differ():
+    tr = _trace()
+    rs = profile_system(tr, tech="sram")
+    rf = profile_system(tr, tech="fefet")
+    assert rs.cim.caches != pytest.approx(rf.cim.caches)

@@ -1,0 +1,40 @@
+"""All 17 paper workloads: VM output == jax.jit output (numerical ground
+truth), plus a full profile producing finite, in-range metrics."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import OffloadConfig, profile_system, trace_program
+from repro.workloads import WORKLOADS, build
+
+FAST = sorted(WORKLOADS)
+
+
+@pytest.mark.parametrize("name", FAST)
+def test_workload_vm_matches_xla(name):
+    fn, args = build(name)
+    tr = trace_program(fn, *args)
+    expected = jax.tree_util.tree_leaves(jax.jit(fn)(*args))
+    assert len(tr.outputs) == len(expected)
+    for got, exp in zip(tr.outputs, expected):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["LCS", "SSSP", "DT", "mcf"])
+def test_workload_profile_in_range(name):
+    fn, args = build(name)
+    tr = trace_program(fn, *args)
+    rep = profile_system(tr)
+    assert 0.0 < rep.macr <= 1.0
+    assert 0.5 < rep.energy_improvement < 10.0
+    assert 0.5 < rep.speedup < 3.0
+    assert np.isfinite(rep.base.total) and np.isfinite(rep.cim.total)
+
+
+def test_lcs_is_cim_favorable():
+    """§VI-A validation workload: LCS must clear the MACR ≥ 0.5 bar."""
+    fn, args = build("LCS")
+    tr = trace_program(fn, *args)
+    rep = profile_system(tr)
+    assert rep.cim_favorable
