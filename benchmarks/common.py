@@ -1,34 +1,48 @@
-"""Shared benchmark utilities: cached workload traces + CSV/JSON emission.
+"""Shared benchmark utilities: one DSE analysis cache + CSV/JSON emission.
 
 Every benchmark module reproduces one paper table/figure and exposes
 ``run() -> list[dict]``; ``benchmarks.run`` executes all of them and tees
 CSV artifacts under ``benchmarks/artifacts/``.
+
+All trace-driven benchmarks share a single :class:`repro.dse.AnalysisCache`
+(via :func:`engine` / :func:`cached_trace`), so across a full
+``benchmarks.run`` each (workload, cache-config) pair is traced and
+IDG-analyzed exactly once no matter how many figures price it.
 """
 from __future__ import annotations
 
 import csv
-import functools
 import json
 import pathlib
-import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import trace_program
 from repro.core.cache import CacheConfig
-from repro.workloads import build
+from repro.dse import AnalysisCache, CacheOption, DSEEngine
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
 
-_TRACE_CACHE: Dict[Tuple, object] = {}
+# The nine Fig. 13–15 sweep benchmarks (paper's per-figure subset).
+SWEEP_BENCHES = ("NB", "DT", "KM", "LCS", "BFS", "SSSP", "CCOMP", "hmmer",
+                 "mcf")
+
+_ENGINE: Optional[DSEEngine] = None
 
 
-def cached_trace(name: str, cache_levels: Optional[Tuple[CacheConfig, ...]] = None):
-    key = (name, cache_levels)
-    if key not in _TRACE_CACHE:
-        fn, args = build(name)
-        kw = {} if cache_levels is None else {"cache_levels": cache_levels}
-        _TRACE_CACHE[key] = trace_program(fn, *args, **kw)
-    return _TRACE_CACHE[key]
+def engine() -> DSEEngine:
+    """Process-wide sweep engine (one shared analysis cache)."""
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = DSEEngine()
+    return _ENGINE
+
+
+def cached_trace(name: str,
+                 cache_levels: Optional[Tuple[CacheConfig, ...]] = None):
+    """Memoized ``TraceResult`` for a workload (engine-backed)."""
+    from repro.core.cache import L1_32K, L2_256K
+    option = CacheOption.of(cache_levels if cache_levels is not None
+                            else (L1_32K, L2_256K))
+    return engine().analysis.trace(name, option)
 
 
 def emit(name: str, rows: List[dict]) -> pathlib.Path:

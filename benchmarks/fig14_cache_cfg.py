@@ -1,25 +1,27 @@
 """Fig. 14: energy improvement under three cache configurations
 (32K/256K, 64K/256K, 64K/2M) — exercises the DESTINY-surrogate scaling and
-the paper's finding that bigger arrays raise per-op CiM energy."""
+the paper's finding that bigger arrays raise per-op CiM energy.
+
+Runs as one :class:`repro.dse.SweepSpace` over (benchmark x cache config):
+each benchmark is traced once per cache geometry and priced from the shared
+analysis cache."""
 from __future__ import annotations
 
-from repro.core import L1_32K, L1_64K, L2_256K, L2_2M, profile_system
-from benchmarks.common import banner, cached_trace, emit
+from repro.dse import SweepSpace
+from benchmarks.common import SWEEP_BENCHES, banner, emit, engine
 
-BENCHES = ("NB", "DT", "KM", "LCS", "BFS", "SSSP", "CCOMP", "hmmer", "mcf")
-CFGS = [("32K+256K", (L1_32K, L2_256K)),
-        ("64K+256K", (L1_64K, L2_256K)),
-        ("64K+2M", (L1_64K, L2_2M))]
+CFG_NAMES = ("32K+256K", "64K+256K", "64K+2M")
 
 
 def run():
+    space = SweepSpace(workloads=SWEEP_BENCHES, caches=CFG_NAMES)
+    results = engine().run(space)
+    by_bench = results.group_by("workload")
     rows = []
-    for name in BENCHES:
+    for name in SWEEP_BENCHES:
         row = {"benchmark": name}
-        for cfg_name, levels in CFGS:
-            tr = cached_trace(name, levels)
-            rep = profile_system(tr)
-            row[cfg_name] = round(rep.energy_improvement, 3)
+        for rec in by_bench[name]:
+            row[rec.cache] = round(rec.energy_improvement, 3)
         rows.append(row)
     return rows
 
@@ -29,7 +31,7 @@ def main():
     rows = run()
     for r in rows:
         print(f"  {r['benchmark']:8s} " +
-              " ".join(f"{n}={r[n]:5.2f}" for n, _ in CFGS))
+              " ".join(f"{n}={r[n]:5.2f}" for n in CFG_NAMES))
     emit("fig14_cache_cfg", rows)
     return rows
 

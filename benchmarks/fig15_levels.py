@@ -1,23 +1,29 @@
 """Fig. 15: energy improvement with CiM in L1 only, L2 only, or both —
-the paper's 'which level should host the CiM?' question."""
+the paper's 'which level should host the CiM?' question.
+
+One sweep over (benchmark x CiM level set); the trace/IDG analysis is
+shared across all three level choices per benchmark (only candidate
+selection re-runs), which is exactly the reuse the DSE engine memoizes."""
 from __future__ import annotations
 
-from repro.core import OffloadConfig, profile_system
-from benchmarks.common import banner, cached_trace, emit
+from repro.dse import SweepSpace
+from benchmarks.common import SWEEP_BENCHES, banner, emit, engine
 
-BENCHES = ("NB", "DT", "KM", "LCS", "BFS", "SSSP", "CCOMP", "hmmer", "mcf")
-LEVELS = [("L1_only", ("L1",)), ("L2_only", ("L2",)), ("both", ("L1", "L2"))]
+LEVEL_NAMES = ("L1_only", "L2_only", "both")
+_COLUMN_OF = {"L1": "L1_only", "L2": "L2_only", "L1+L2": "both"}
 
 
 def run():
+    space = SweepSpace(workloads=SWEEP_BENCHES, cim_levels=LEVEL_NAMES)
+    results = engine().run(space)
+    by_bench = results.group_by("workload")
     rows = []
-    for name in BENCHES:
-        tr = cached_trace(name)
+    for name in SWEEP_BENCHES:
         row = {"benchmark": name}
-        for lname, lv in LEVELS:
-            rep = profile_system(tr, OffloadConfig(cim_levels=lv))
-            row[lname] = round(rep.energy_improvement, 3)
-        row["l2_worst"] = row["L2_only"] <= min(row["L1_only"], row["both"]) + 1e-9
+        for rec in by_bench[name]:
+            row[_COLUMN_OF[rec.cim_levels]] = round(rec.energy_improvement, 3)
+        row["l2_worst"] = row["L2_only"] <= min(row["L1_only"],
+                                                row["both"]) + 1e-9
         rows.append(row)
     return rows
 

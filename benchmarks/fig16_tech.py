@@ -1,27 +1,34 @@
 """Fig. 16: SRAM vs FeFET CiM — energy improvement normalized to the SRAM
-non-CiM baseline (the paper's normalization) + speedup comparison."""
+non-CiM baseline (the paper's normalization) + speedup comparison.
+
+A pure technology sweep: per benchmark the engine re-prices the *same*
+memoized trace + candidate set under each Table III device model, so the
+whole figure costs one analysis pass per workload."""
 from __future__ import annotations
 
-from repro.core import profile_system
+from repro.dse import SweepSpace
 from repro.workloads import WORKLOADS
-from benchmarks.common import banner, cached_trace, emit
+from benchmarks.common import banner, emit, engine
 
 
 def run():
+    space = SweepSpace(workloads=tuple(WORKLOADS), techs=("sram", "fefet"))
+    results = engine().run(space)
+    by_bench = results.group_by("workload")
     rows = []
     for name in WORKLOADS:
-        tr = cached_trace(name)
-        sram = profile_system(tr, tech="sram")
-        fefet = profile_system(tr, tech="fefet")
-        base = sram.base.total                       # SRAM non-CiM baseline
+        sram, fefet = by_bench[name]
+        assert (sram.tech, fefet.tech) == ("sram", "fefet")
+        base = sram.base_energy_pj                   # SRAM non-CiM baseline
         rows.append({
             "benchmark": name,
-            "sram_improvement": round(base / sram.cim.total, 3),
-            "fefet_improvement": round(base / fefet.cim.total, 3),
+            "sram_improvement": round(base / sram.cim_energy_pj, 3),
+            "fefet_improvement": round(base / fefet.cim_energy_pj, 3),
             "sram_speedup": round(sram.speedup, 3),
             "fefet_speedup": round(fefet.speedup, 3),
             "fefet_gain_pct": round(
-                (base / fefet.cim.total) / (base / sram.cim.total) * 100 - 100, 1),
+                (base / fefet.cim_energy_pj)
+                / (base / sram.cim_energy_pj) * 100 - 100, 1),
         })
     return rows
 

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table6     # one artifact
+    PYTHONPATH=src python -m benchmarks.run --list     # enumerate artifacts
 """
 from __future__ import annotations
 
@@ -28,6 +29,11 @@ ALL = {
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    if "--list" in argv:
+        for name, mod in ALL.items():
+            doc = next(iter((mod.__doc__ or "").strip().splitlines()), "")
+            print(f"{name:10s} {doc}")
+        return 0
     picks = argv or list(ALL)
     t0 = time.time()
     for name in picks:

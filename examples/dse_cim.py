@@ -1,52 +1,99 @@
-"""Design-space exploration (the paper's three questions, §VI-D/E):
+"""Design-space exploration with `repro.dse` (the paper's §VI-D/E questions).
 
-  1. Is this program CiM-favorable?          -> MACR + improvement
-  2. Which cache level should host the CiM?  -> L1-only vs L2-only vs both
-  3. Which technology?                       -> SRAM vs FeFET
+Quickstart
+==========
+A sweep is a typed cross-product over the paper's four design axes
+(workload, cache geometry, CiM level set, device technology); the engine
+memoizes the expensive trace/IDG analysis per (workload, cache) and fans
+the cheap pricing phase out over a worker pool::
+
+    from repro.dse import DSEEngine, SweepSpace
+
+    space = SweepSpace(
+        workloads=("KM", "BFS"),                 # Table IV programs
+        caches=("32K+256K", "64K+256K", "64K+2M"),   # Fig. 14 axis
+        cim_levels=("L1_only", "L2_only", "both"),   # Fig. 15 axis
+        techs=("sram", "fefet"),                     # Fig. 16 axis
+    )
+    results = DSEEngine().run(space)             # 36 points, 6 analyses
+
+    best = results.best("energy_improvement", workload="KM")
+    front = results.pareto(("energy_improvement", "speedup"))
+    print(results.to_markdown())                 # report w/ Pareto frontier
+    results.to_json("sweep.json")                # structured records
+
+Run this module for a guided tour over one workload::
 
     PYTHONPATH=src python examples/dse_cim.py --workload KM
+    PYTHONPATH=src python examples/dse_cim.py --workload KM --report sweep.md
 """
 import argparse
 import sys
 
-from repro.core import (CIM_SET_STT, L1_32K, L1_64K, L2_256K, L2_2M,
-                        OffloadConfig, profile_system, trace_program)
-from repro.workloads import WORKLOADS, build
+from repro.dse import DSEEngine, SweepSpace
+from repro.workloads import WORKLOADS
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="KM", choices=sorted(WORKLOADS))
+    ap.add_argument("--executor", default="thread",
+                    choices=["thread", "process", "serial"])
+    ap.add_argument("--report", default=None,
+                    help="write the markdown sweep report here")
+    ap.add_argument("--json", default=None,
+                    help="write structured sweep records here")
     args = ap.parse_args(argv)
 
-    fn, wargs = build(args.workload)
+    engine = DSEEngine(executor=args.executor)
+    space = SweepSpace(workloads=(args.workload,),
+                       caches=("32K+256K", "64K+256K", "64K+2M"),
+                       cim_levels=("L1_only", "L2_only", "both"),
+                       techs=("sram", "fefet"))
+    print(f"== {args.workload}: {len(space)} design points, "
+          f"{space.n_analyses()} trace analyses ==")
+    results = engine.run(space)
+    st = results.stats
+    print(f"   done in {results.elapsed_s:.1f}s "
+          f"(trace builds {st.get('trace_builds')}, "
+          f"selection builds {st.get('offload_builds')})")
 
-    print(f"== {args.workload}: cache-configuration sweep (Fig. 14) ==")
-    for name, levels in (("32K/4w L1 + 256K/8w L2", (L1_32K, L2_256K)),
-                         ("64K/4w L1 + 256K/8w L2", (L1_64K, L2_256K)),
-                         ("64K/4w L1 + 2M/8w L2", (L1_64K, L2_2M))):
-        tr = trace_program(fn, *wargs, cache_levels=levels)
-        rep = profile_system(tr)
-        print(f"  {name:26s} E-impr {rep.energy_improvement:5.2f}x "
-              f"speedup {rep.speedup:5.2f}x macr {rep.macr:.3f}")
+    print("== cache-configuration slice (Fig. 14, CiM@L1+L2, SRAM) ==")
+    for r in results:
+        if r.cim_levels == "L1+L2" and r.tech == "sram":
+            print(f"  {r.cache:10s} E-impr {r.energy_improvement:5.2f}x "
+                  f"speedup {r.speedup:5.2f}x macr {r.macr:.3f}")
 
-    print("== CiM level (Fig. 15) ==")
-    tr = trace_program(fn, *wargs)
-    for name, lv in (("L1 only", ("L1",)), ("L2 only", ("L2",)),
-                     ("L1 + L2", ("L1", "L2"))):
-        rep = profile_system(tr, OffloadConfig(cim_set=CIM_SET_STT,
-                                               cim_levels=lv))
-        print(f"  {name:10s} E-impr {rep.energy_improvement:5.2f}x "
-              f"speedup {rep.speedup:5.2f}x")
+    print("== CiM level slice (Fig. 15, 32K+256K, SRAM) ==")
+    for r in results:
+        if r.cache == "32K+256K" and r.tech == "sram":
+            print(f"  {r.cim_levels:6s} E-impr {r.energy_improvement:5.2f}x "
+                  f"speedup {r.speedup:5.2f}x")
 
-    print("== technology (Fig. 16) ==")
-    base_sram = profile_system(tr, tech="sram")
-    for tech in ("sram", "fefet"):
-        rep = profile_system(tr, tech=tech)
-        # paper normalizes to the SRAM non-CiM baseline
-        cross = base_sram.base.total / rep.cim.total
-        print(f"  {tech:6s} E-impr vs SRAM-baseline {cross:5.2f}x "
-              f"speedup {rep.speedup:5.2f}x")
+    print("== technology slice (Fig. 16, 32K+256K, CiM@L1+L2) ==")
+    sram_base = next(r.base_energy_pj for r in results
+                     if r.cache == "32K+256K" and r.cim_levels == "L1+L2"
+                     and r.tech == "sram")
+    for r in results:
+        if r.cache == "32K+256K" and r.cim_levels == "L1+L2":
+            # paper normalizes to the SRAM non-CiM baseline
+            print(f"  {r.tech:6s} E-impr vs SRAM-baseline "
+                  f"{sram_base / r.cim_energy_pj:5.2f}x "
+                  f"speedup {r.speedup:5.2f}x")
+
+    front = results.pareto(("energy_improvement", "speedup"))
+    print(f"== Pareto frontier (energy improvement vs speedup) ==")
+    for r in front:
+        print(f"  {r.config_label:34s} E {r.energy_improvement:5.2f}x "
+              f"spd {r.speedup:5.2f}x")
+
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(results.to_markdown())
+        print(f"[report] {args.report}")
+    if args.json:
+        results.to_json(args.json)
+        print(f"[json] {args.json}")
     return 0
 
 

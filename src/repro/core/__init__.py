@@ -17,6 +17,7 @@ from repro.core.idg import IDGBuilder, IDGNode, build_flow_index
 from repro.core.isa import (CIM_SET_FULL, CIM_SET_LOGIC, CIM_SET_STT, Inst,
                             Trace)
 from repro.core.offload import (Candidate, OffloadConfig, OffloadResult,
+                                TraceAnalysis, analyze_trace,
                                 select_candidates)
 from repro.core.profiler import Profiler, SystemReport, profile_system
 from repro.core.reshape import ReshapedTrace, reshape
@@ -27,7 +28,8 @@ __all__ = [
     "SPM_1M", "FEFET", "SRAM", "TECHS", "TechModel", "DEFAULT_HOST",
     "HostModel", "IDGBuilder", "IDGNode", "build_flow_index", "CIM_SET_FULL",
     "CIM_SET_LOGIC", "CIM_SET_STT", "Inst", "Trace", "Candidate",
-    "OffloadConfig", "OffloadResult", "select_candidates", "Profiler",
+    "OffloadConfig", "OffloadResult", "TraceAnalysis", "analyze_trace",
+    "select_candidates", "Profiler",
     "SystemReport", "profile_system", "ReshapedTrace", "reshape", "Machine",
     "TraceResult", "trace_program",
 ]

@@ -221,11 +221,41 @@ def _try_accept(node: IDGNode, flow: FlowIndex, trace: Trace,
     )
 
 
+@dataclasses.dataclass
+class TraceAnalysis:
+    """Config-independent artifacts of one traced workload.
+
+    Everything here depends only on the program and the cache hierarchy it
+    was traced under — not on the CiM level set, op set, or technology.
+    Building it once and pricing many configurations against it is what
+    makes design-space sweeps cheap (see :mod:`repro.dse.engine`).
+    """
+    trace: Trace
+    rut: Dict[int, List[int]]
+    iht: Dict[int, List[Tuple[int, int]]]
+    builder: IDGBuilder
+    flow: FlowIndex
+
+    def select(self, cfg: OffloadConfig = OffloadConfig()) -> OffloadResult:
+        """Run Algorithm 1 against these artifacts for one configuration."""
+        return select_candidates(self.trace, self.rut, self.iht, cfg,
+                                 flow=self.flow, builder=self.builder)
+
+
+def analyze_trace(tr) -> TraceAnalysis:
+    """Build the reusable IDG/flow artifacts for a ``TraceResult`` (or any
+    object exposing ``trace``/``rut``/``iht``)."""
+    builder = IDGBuilder(tr.trace, tr.rut, tr.iht)
+    flow = build_flow_index(tr.trace, tr.rut, tr.iht)
+    return TraceAnalysis(tr.trace, tr.rut, tr.iht, builder, flow)
+
+
 def select_candidates(trace: Trace, rut, iht,
                       cfg: OffloadConfig = OffloadConfig(),
-                      flow: Optional[FlowIndex] = None) -> OffloadResult:
+                      flow: Optional[FlowIndex] = None,
+                      builder: Optional[IDGBuilder] = None) -> OffloadResult:
     """Algorithm 1: build tables -> build IDG trees -> partition/extract."""
-    builder = IDGBuilder(trace, rut, iht)
+    builder = builder or IDGBuilder(trace, rut, iht)
     flow = flow or build_flow_index(trace, rut, iht)
     claimed: Set[int] = set()
     candidates: List[Candidate] = []

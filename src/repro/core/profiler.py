@@ -224,11 +224,19 @@ def profile_system(tr: TraceResult,
                    offload_cfg: OffloadConfig = OffloadConfig(),
                    tech: str = "sram",
                    host: HostModel = DEFAULT_HOST,
-                   offload: Optional[OffloadResult] = None) -> SystemReport:
+                   offload: Optional[OffloadResult] = None,
+                   reshaped: Optional[ReshapedTrace] = None) -> SystemReport:
+    """Price one (program, configuration) pair.
+
+    ``offload`` / ``reshaped`` let callers reuse the config-independent
+    analysis artifacts (see :func:`repro.core.offload.analyze_trace` and the
+    sweep engine in :mod:`repro.dse`): passing them skips candidate
+    selection and trace reshaping, leaving only the cheap pricing phase.
+    """
     trace = tr.trace
     cache_cfgs = tuple(lv.cfg for lv in tr.cache.levels)
     result = offload or select_candidates(trace, tr.rut, tr.iht, offload_cfg)
-    reshaped = reshape(trace, result)
+    reshaped = reshaped or reshape(trace, result)
     prof = Profiler(cache_cfgs, tech=tech, host=host)
     base_eb, base_cycles = prof.price_baseline(trace)
     cim_eb, cim_cycles = prof.price_cim(trace, reshaped)

@@ -1,0 +1,4 @@
+"""Distribution utilities: logical-axis sharding rules over a device mesh."""
+from repro.dist import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,188 @@
+"""Logical-axis sharding: rules mapping model-semantic axis names to mesh axes.
+
+Model code annotates activations with *logical* names only —
+``shard(x, "batch", "seq", "embed")`` — and stays mesh-agnostic.  A launch
+site builds a rule table with :func:`make_rules` (logical name -> mesh axis
+or ``None``) and activates it with :func:`use_rules`; outside an active
+context ``shard`` is the identity, so single-device tests and the trace VM
+never touch jax sharding machinery.
+
+Parameter / optimizer / input shardings are shape-driven rather than
+per-architecture tables: ``param_specs`` partitions each leaf's largest
+mesh-divisible dimension across the model axis (embeddings split on vocab,
+FFN weights on d_ff, ...), ``opt_state_specs`` additionally spreads the
+remaining replicated dimension across the data axis (ZeRO-1-style moment
+sharding), and ``batch_input_shardings`` splits the leading batch dimension
+across the data axis.  Every rule degrades to replication when a dimension
+does not divide evenly, so reduced CPU configs lower unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical activation axes that map onto the model-parallel mesh axis
+_MODEL_AXES = ("heads", "kv_heads", "dff", "vocab", "expert", "embed_out")
+# logical axes that stay replicated (sequence / feature dims)
+_REPLICATED = ("seq", "embed", "cap")
+
+_state = threading.local()
+
+
+def _ctx() -> Optional[Tuple[Mesh, Dict[str, Optional[str]]]]:
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, Optional[str]]):
+    """Activate ``rules`` for all :func:`shard` calls in this thread."""
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def make_rules(cfg, mesh: Mesh, shape=None, strategy: str = "auto"
+               ) -> Dict[str, Optional[str]]:
+    """Logical-name -> mesh-axis table for ``cfg`` on ``mesh``.
+
+    ``strategy`` "auto"/"2d" uses (data, model) when both exist;
+    "data" forces pure data parallelism (model axes replicated).
+    """
+    axes = dict(mesh.shape)
+    data = "data" if axes.get("data", 1) > 1 else None
+    model = "model" if axes.get("model", 1) > 1 else None
+    if strategy == "data":
+        model = None
+    rules: Dict[str, Optional[str]] = {"batch": data}
+    for name in _MODEL_AXES:
+        rules[name] = model
+    for name in _REPLICATED:
+        rules[name] = None
+    return rules
+
+
+def shard(x, *names: Optional[str]):
+    """Constrain ``x``'s sharding by logical axis names (identity when no
+    rules are active or a mapped mesh axis does not divide the dim)."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(names) != x.ndim:
+        raise ValueError(f"shard(): {len(names)} axis names for a "
+                         f"{x.ndim}-d array of shape {x.shape}")
+    spec, used = [], set()
+    for dim, name in zip(x.shape, names):
+        axis = rules.get(name) if name else None
+        if axis is None or axis in used or dim % _axis_size(mesh, axis):
+            spec.append(None)
+        else:
+            spec.append(axis)
+            used.add(axis)
+    if not any(spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------- specs
+def _leaf_spec(shape: Tuple[int, ...], axis: Optional[str], size: int) -> P:
+    """Partition the largest ``size``-divisible dim of ``shape`` on ``axis``
+    (ties pick the trailing dim: output features / vocab)."""
+    if axis is None or size <= 1 or len(shape) < 1:
+        return P()
+    best = None
+    for i, d in enumerate(shape):
+        if d >= size and d % size == 0 and (best is None or d >= shape[best]):
+            best = i
+    if best is None:
+        return P()
+    spec = [None] * len(shape)
+    spec[best] = axis
+    return P(*spec)
+
+
+def param_specs(cfg, mesh: Mesh, params_shape, strategy: str = "auto"):
+    """PartitionSpec tree for a params pytree (tensor parallelism)."""
+    rules = make_rules(cfg, mesh, strategy=strategy)
+    axis = rules.get("vocab")                     # the model axis, if enabled
+    size = _axis_size(mesh, axis)
+    return jax.tree_util.tree_map(
+        lambda leaf: _leaf_spec(tuple(leaf.shape), axis, size), params_shape)
+
+
+def opt_state_specs(cfg, mesh: Mesh, params_shape, pspecs,
+                    strategy: str = "auto"):
+    """ZeRO-1-style specs for optimizer moments: keep the tensor-parallel
+    split and spread one replicated dim across the data axis."""
+    data = "data" if _axis_size(mesh, "data") > 1 else None
+    dsize = _axis_size(mesh, data)
+
+    def widen(leaf, spec: P):
+        shape = tuple(leaf.shape)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if data is None or data in entries:
+            return P(*entries) if any(entries) else P()
+        best = None
+        for i, d in enumerate(shape):
+            if entries[i] is None and d >= dsize and d % dsize == 0 \
+                    and (best is None or d >= shape[best]):
+                best = i
+        if best is not None:
+            entries[best] = data
+        return P(*entries) if any(entries) else P()
+
+    return jax.tree_util.tree_map(widen, params_shape, pspecs)
+
+
+def named(mesh: Mesh, specs):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_input_shardings(mesh: Mesh, batch_spec, rules):
+    """Shard the leading (batch) dim of every input leaf on the data axis."""
+    axis = rules.get("batch")
+    size = _axis_size(mesh, axis)
+
+    def leaf(l):
+        shape = tuple(l.shape)
+        if axis and shape and shape[0] >= size and shape[0] % size == 0:
+            return NamedSharding(mesh, P(axis, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf, batch_spec)
+
+
+def cache_specs(cfg, mesh: Mesh, cache_shape, rules):
+    """Specs for stacked decode caches: leaves are (layers, batch, ...) —
+    shard the batch dim (axis 1) on the data axis when it divides."""
+    axis = rules.get("batch")
+    size = _axis_size(mesh, axis)
+
+    def leaf(l):
+        shape = tuple(l.shape)
+        if axis and len(shape) >= 2 and shape[1] >= size and shape[1] % size == 0:
+            spec = [None] * len(shape)
+            spec[1] = axis
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map(leaf, cache_shape)

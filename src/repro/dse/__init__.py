@@ -1,0 +1,39 @@
+"""repro.dse — parallel design-space exploration for Eva-CiM.
+
+The paper's headline use-case (§VI-D/E) is sweeping cache configurations,
+CiM levels, and device technologies to locate the designs with the best
+energy/performance trade-off.  This package turns the ad-hoc loops of the
+early examples into a subsystem:
+
+  * :mod:`repro.dse.space`   — typed sweep specification (cross-product
+    enumeration with named presets for the paper's swept values),
+  * :mod:`repro.dse.engine`  — executor with a layered analysis cache
+    (trace/IDG once per workload+cache, candidate selection once per
+    offload config, pricing per point) and thread/process fan-out,
+  * :mod:`repro.dse.results` — structured records, JSON/markdown reports,
+  * :mod:`repro.dse.pareto`  — Pareto-frontier extraction over arbitrary
+    objective sets.
+
+Quickstart::
+
+    from repro.dse import DSEEngine, SweepSpace
+
+    space = SweepSpace(workloads=("KM", "BFS"),
+                       caches=("32K+256K", "64K+2M"),
+                       cim_levels=("L1_only", "both"),
+                       techs=("sram", "fefet"))
+    results = DSEEngine().run(space)
+    print(results.best("energy_improvement", workload="KM").config_label)
+    print(results.to_markdown())
+"""
+from repro.dse.engine import AnalysisCache, DSEEngine
+from repro.dse.pareto import dominates, objective_vector, pareto_front
+from repro.dse.results import SweepRecord, SweepResults
+from repro.dse.space import (CACHE_PRESETS, CIM_SETS, LEVEL_PRESETS,
+                             CacheOption, SweepPoint, SweepSpace)
+
+__all__ = [
+    "AnalysisCache", "DSEEngine", "dominates", "objective_vector",
+    "pareto_front", "SweepRecord", "SweepResults", "CACHE_PRESETS",
+    "CIM_SETS", "LEVEL_PRESETS", "CacheOption", "SweepPoint", "SweepSpace",
+]

@@ -1,0 +1,248 @@
+"""Sweep executor: memoized trace analysis + fanned-out per-config pricing.
+
+The Eva-CiM pipeline splits cleanly into two phases with very different
+costs and very different dependence on the swept axes:
+
+  ========================  =====================  ========================
+  phase                     depends on             cost
+  ========================  =====================  ========================
+  trace + IDG/flow index    workload, cache geom   seconds (trace VM)
+  candidate selection       + cim_levels/cim_set   ~100 ms (Algorithm 1)
+  pricing (energy/cycles)   + tech, host           ~100 ms (linear scan)
+  ========================  =====================  ========================
+
+:class:`AnalysisCache` memoizes the first two layers by their exact
+dependence keys, so a Fig. 16 technology sweep re-runs *nothing* but
+pricing, and a Fig. 15 level sweep re-runs selection only.  The
+:class:`DSEEngine` walks a :class:`~repro.dse.space.SweepSpace` in
+deterministic order, warms the cache once per analysis key, and fans the
+cheap pricing phase out over a worker pool ("thread", "process", or
+"serial") — results always come back in SweepPoint order regardless of
+executor scheduling.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import threading
+import time
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.host_model import DEFAULT_HOST, HostModel
+from repro.core.offload import (OffloadConfig, OffloadResult, TraceAnalysis,
+                                analyze_trace)
+from repro.core.profiler import profile_system
+from repro.core.reshape import ReshapedTrace, reshape
+from repro.core.trace import TraceResult, trace_program
+from repro.dse.results import SweepRecord, SweepResults
+from repro.dse.space import CacheOption, SweepPoint, SweepSpace
+
+
+class AnalysisCache:
+    """Layered memo of the config-independent sweep artifacts.
+
+    Layer 1 — ``(workload, cache)``  -> traced program + IDG/flow tables.
+    Layer 2 — ``(layer-1 key, offload config)`` -> selected candidates +
+    reshaped trace.  Hit/build counters are exposed for tests and reports
+    (the "trace analysis ran exactly once per workload" guarantee).
+    """
+
+    def __init__(self):
+        self._traces: Dict[Tuple, TraceResult] = {}
+        self._analyses: Dict[Tuple, TraceAnalysis] = {}
+        self._offloads: Dict[Tuple, Tuple[OffloadResult, ReshapedTrace]] = {}
+        self._lock = threading.RLock()
+        self._key_locks: Dict[Tuple, threading.Lock] = {}
+        self.trace_builds = 0
+        self.trace_hits = 0
+        self.offload_builds = 0
+        self.offload_hits = 0
+
+    def _key_lock(self, key: Tuple) -> threading.Lock:
+        """Per-key build lock: concurrent misses on one key build once."""
+        with self._lock:
+            lk = self._key_locks.get(key)
+            if lk is None:
+                lk = self._key_locks[key] = threading.Lock()
+            return lk
+
+    # ------------------------------------------------------------ layer 1
+    def trace(self, workload: str, cache: CacheOption) -> TraceResult:
+        from repro.workloads import build          # late: keep core importable
+        key = (workload, cache.levels)             # full geometry, not name
+        with self._key_lock(key):
+            with self._lock:
+                hit = self._traces.get(key)
+                if hit is not None:
+                    self.trace_hits += 1
+                    return hit
+                self.trace_builds += 1
+            fn, args = build(workload)
+            tr = trace_program(fn, *args, cache_levels=cache.levels)
+            with self._lock:
+                self._traces[key] = tr
+            return tr
+
+    def trace_analysis(self, workload: str, cache: CacheOption
+                       ) -> TraceAnalysis:
+        """IDG/flow artifacts for a trace, built lazily on first use —
+        callers that only need the raw trace never pay for the flow index."""
+        key = (workload, cache.levels)
+        with self._key_lock(("analysis",) + key):
+            with self._lock:
+                hit = self._analyses.get(key)
+            if hit is not None:
+                return hit
+            analysis = analyze_trace(self.trace(workload, cache))
+            with self._lock:
+                self._analyses[key] = analysis
+            return analysis
+
+    # ------------------------------------------------------------ layer 2
+    def offload(self, workload: str, cache: CacheOption,
+                cfg: OffloadConfig) -> Tuple[OffloadResult, ReshapedTrace]:
+        # the frozen OffloadConfig is hashable-by-value: using it directly
+        # keeps the key complete if new knobs are ever added to it
+        key = (workload, cache.levels, cfg)
+        with self._key_lock(key):
+            with self._lock:
+                hit = self._offloads.get(key)
+                if hit is not None:
+                    self.offload_hits += 1
+                    return hit
+                self.offload_builds += 1
+            analysis = self.trace_analysis(workload, cache)
+            result = analysis.select(cfg)
+            reshaped = reshape(analysis.trace, result)
+            with self._lock:
+                self._offloads[key] = (result, reshaped)
+            return result, reshaped
+
+    def stats(self) -> Dict[str, int]:
+        return {"trace_builds": self.trace_builds,
+                "trace_hits": self.trace_hits,
+                "offload_builds": self.offload_builds,
+                "offload_hits": self.offload_hits}
+
+
+# ======================================================================
+# Engine
+# ======================================================================
+_WORKER_CACHE: Optional[AnalysisCache] = None   # per-process, for "process"
+
+
+def _worker_chunk(points: Sequence[SweepPoint], host: HostModel
+                  ) -> Tuple[List[SweepRecord], Dict[str, int]]:
+    """Price a run of points inside one process-pool worker (the worker
+    keeps its own AnalysisCache across chunks, so one trace per workload
+    *per worker* — chunks are grouped by analysis key to preserve that).
+    Returns the records plus this chunk's delta of the cache counters, so
+    the parent can report true build totals across all workers."""
+    global _WORKER_CACHE
+    if _WORKER_CACHE is None:
+        _WORKER_CACHE = AnalysisCache()
+    before = _WORKER_CACHE.stats()
+    records = [_evaluate(_WORKER_CACHE, p, host) for p in points]
+    delta = {k: v - before[k] for k, v in _WORKER_CACHE.stats().items()}
+    return records, delta
+
+
+def _evaluate(cache: AnalysisCache, point: SweepPoint, host: HostModel
+              ) -> SweepRecord:
+    tr = cache.trace(point.workload, point.cache)
+    result, reshaped = cache.offload(point.workload, point.cache,
+                                     point.offload_config())
+    rep = profile_system(tr, tech=point.tech, host=host,
+                         offload=result, reshaped=reshaped)
+    return SweepRecord.from_report(point, rep)
+
+
+class DSEEngine:
+    """Parallel design-space-exploration executor.
+
+    ``executor``:
+      * ``"thread"`` (default) — one shared :class:`AnalysisCache`; pricing
+        fans out over threads (pricing is numpy/dict-walking, mostly
+        GIL-bound, but trace analysis never repeats: exactly one per
+        (workload, cache) per engine).
+      * ``"process"`` — points are chunked by analysis key and each chunk
+        runs in a spawned worker process with a per-process cache (full
+        CPU parallelism across workloads, at most one analysis per key
+        per worker).  Spawn semantics apply: call it from a real module
+        (under ``if __name__ == "__main__":`` in scripts), not stdin.
+      * ``"serial"`` — no pool at all; useful for debugging and exact
+        cost accounting.
+    """
+
+    def __init__(self, cache: Optional[AnalysisCache] = None,
+                 host: HostModel = DEFAULT_HOST,
+                 executor: str = "thread",
+                 max_workers: Optional[int] = None):
+        if executor not in ("thread", "process", "serial"):
+            raise ValueError(f"unknown executor {executor!r}")
+        self.analysis = cache or AnalysisCache()
+        self.host = host
+        self.executor = executor
+        self.max_workers = max_workers or min(8, os.cpu_count() or 1)
+
+    # ------------------------------------------------------------ pieces
+    def evaluate(self, point: SweepPoint) -> SweepRecord:
+        """Price one design point (memoized analysis)."""
+        return _evaluate(self.analysis, point, self.host)
+
+    @staticmethod
+    def _chunks(points: Sequence[SweepPoint]) -> List[List[SweepPoint]]:
+        """Contiguous runs sharing one analysis key (enumeration order is
+        workload-major, so one pass suffices)."""
+        chunks: List[List[SweepPoint]] = []
+        for p in points:
+            if chunks and chunks[-1][0].analysis_key == p.analysis_key:
+                chunks[-1].append(p)
+            else:
+                chunks.append([p])
+        return chunks
+
+    # -------------------------------------------------------------- run
+    def run(self, space: SweepSpace) -> SweepResults:
+        t0 = time.perf_counter()
+        points = space.points()
+        records: List[Optional[SweepRecord]] = [None] * len(points)
+        stats_before = self.analysis.stats()
+
+        worker_stats: Optional[Dict[str, int]] = None
+        if self.executor == "serial":
+            for p in points:
+                records[p.index] = self.evaluate(p)
+        elif self.executor == "process":
+            chunks = self._chunks(points)
+            # spawn, not fork: the parent holds live jax/XLA threads
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=self.max_workers,
+                                     mp_context=ctx) as pool:
+                futs = [pool.submit(_worker_chunk, c, self.host)
+                        for c in chunks]
+                worker_stats = {}
+                for fut in futs:
+                    recs, delta = fut.result()
+                    for rec in recs:
+                        records[rec.index] = rec
+                    for k, v in delta.items():
+                        worker_stats[k] = worker_stats.get(k, 0) + v
+        else:
+            # warm the analysis cache serially (deterministic build order,
+            # exactly one trace pass per key), then fan pricing out
+            for chunk in self._chunks(points):
+                head = chunk[0]
+                self.analysis.trace(head.workload, head.cache)
+            with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+                for rec in pool.map(self.evaluate, points):
+                    records[rec.index] = rec
+
+        # stats cover THIS run only, whatever the executor: thread/serial
+        # report the shared-cache counter delta, process mode the summed
+        # per-worker deltas (each chunk is one analysis key, so they agree)
+        stats = worker_stats if worker_stats is not None else {
+            k: v - stats_before[k] for k, v in self.analysis.stats().items()}
+        return SweepResults(records=list(records), stats=stats,
+                            elapsed_s=time.perf_counter() - t0)

@@ -1,0 +1,67 @@
+"""Pareto-frontier extraction over arbitrary objectives.
+
+Works on any records (dataclasses, dicts, plain objects): objectives are
+named attributes/keys, each maximized by default or minimized when given as
+``(name, "min")``.  Output is deterministic — input order is preserved —
+and duplicate-valued points are all kept (they dominate each other weakly
+but strictly dominate nothing).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple, Union
+
+Objective = Union[str, Tuple[str, str]]
+
+
+def _parse(objectives: Sequence[Objective]) -> List[Tuple[str, float]]:
+    out = []
+    for o in objectives:
+        if isinstance(o, str):
+            out.append((o, 1.0))
+        else:
+            name, direction = o
+            if direction not in ("max", "min"):
+                raise ValueError(f"objective direction must be 'max' or "
+                                 f"'min', got {direction!r}")
+            out.append((name, 1.0 if direction == "max" else -1.0))
+    if not out:
+        raise ValueError("need at least one objective")
+    return out
+
+
+def _value(item: Any, name: str) -> float:
+    if isinstance(item, dict):
+        return float(item[name])
+    return float(getattr(item, name))
+
+
+def objective_vector(item: Any, objectives: Sequence[Objective]
+                     ) -> Tuple[float, ...]:
+    """Signed objective values (higher is always better after signing)."""
+    return tuple(sign * _value(item, name)
+                 for name, sign in _parse(objectives))
+
+
+def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
+    """True iff signed-vector ``a`` Pareto-dominates ``b`` (>= everywhere,
+    > somewhere)."""
+    return all(x >= y for x, y in zip(a, b)) and any(x > y
+                                                     for x, y in zip(a, b))
+
+
+def pareto_front(items: Sequence[Any],
+                 objectives: Sequence[Objective] = ("energy_improvement",
+                                                    "speedup")) -> List[Any]:
+    """Non-dominated subset of ``items``, in input order.
+
+    O(n^2) pairwise scan — sweep result sets are hundreds of points, not
+    millions, and the simple scan keeps ties/duplicates handling obvious.
+    """
+    parsed = _parse(objectives)
+    vecs = [tuple(sign * _value(it, name) for name, sign in parsed)
+            for it in items]
+    out = []
+    for i, vi in enumerate(vecs):
+        if not any(dominates(vj, vi) for j, vj in enumerate(vecs) if j != i):
+            out.append(items[i])
+    return out

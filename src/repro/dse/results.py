@@ -1,0 +1,158 @@
+"""Structured sweep results: flat records + JSON / markdown reporting.
+
+One :class:`SweepRecord` per evaluated :class:`~repro.dse.space.SweepPoint`,
+carrying the paper's reported metrics (energy improvement, speedup, MACR,
+Table VI ratios) plus the raw energies/cycles so derived normalizations
+(e.g. Fig. 16's "vs the SRAM non-CiM baseline") can be computed after the
+sweep without re-running anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.profiler import SystemReport
+from repro.dse.pareto import pareto_front
+from repro.dse.space import SweepPoint
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRecord:
+    """One priced design point (metrics are plain floats — picklable and
+    JSON-able, no live trace/model objects)."""
+    index: int
+    workload: str
+    cache: str
+    cim_levels: str                      # "L1+L2" style
+    tech: str
+    cim_set: str
+    energy_improvement: float
+    speedup: float
+    macr: float
+    macr_l1: float
+    base_energy_pj: float
+    cim_energy_pj: float
+    base_cycles: float
+    cim_cycles: float
+    processor_ratio: float
+    cache_ratio: float
+    n_instructions: int
+    n_mem_accesses: int
+    n_candidates: int
+    n_cim_ops: int
+
+    @classmethod
+    def from_report(cls, point: SweepPoint, rep: SystemReport) -> "SweepRecord":
+        return cls(
+            index=point.index,
+            workload=point.workload,
+            cache=point.cache.name,
+            cim_levels="+".join(point.cim_levels),
+            tech=point.tech,
+            cim_set=point.cim_set,
+            energy_improvement=rep.energy_improvement,
+            speedup=rep.speedup,
+            macr=rep.macr,
+            macr_l1=rep.macr_l1,
+            base_energy_pj=rep.base.total,
+            cim_energy_pj=rep.cim.total,
+            base_cycles=rep.base_cycles,
+            cim_cycles=rep.cim_cycles,
+            processor_ratio=rep.processor_ratio,
+            cache_ratio=rep.cache_ratio,
+            n_instructions=rep.n_instructions,
+            n_mem_accesses=rep.n_mem_accesses,
+            n_candidates=rep.n_candidates,
+            n_cim_ops=rep.n_cim_ops,
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @property
+    def config_label(self) -> str:
+        return f"{self.cache}/cim@{self.cim_levels}/{self.tech}/{self.cim_set}"
+
+
+_REPORT_COLUMNS = ("workload", "cache", "cim_levels", "tech",
+                   "energy_improvement", "speedup", "macr")
+
+
+@dataclasses.dataclass
+class SweepResults:
+    """All records of one sweep, in SweepPoint order, plus run metadata."""
+    records: List[SweepRecord]
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    elapsed_s: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    # ------------------------------------------------------------- queries
+    def best(self, metric: str = "energy_improvement",
+             workload: Optional[str] = None) -> SweepRecord:
+        pool = [r for r in self.records
+                if workload is None or r.workload == workload]
+        if not pool:
+            raise ValueError(f"no records for workload={workload!r}")
+        return max(pool, key=lambda r: (getattr(r, metric), -r.index))
+
+    def group_by(self, field: str) -> Dict[str, List[SweepRecord]]:
+        out: Dict[str, List[SweepRecord]] = {}
+        for r in self.records:
+            out.setdefault(getattr(r, field), []).append(r)
+        return out
+
+    def pareto(self, objectives: Sequence = ("energy_improvement", "speedup"),
+               per_workload: bool = True) -> List[SweepRecord]:
+        """Non-dominated records over ``objectives`` (maximized by default;
+        see :func:`repro.dse.pareto.pareto_front` for (name, "min") pairs)."""
+        if not per_workload:
+            return pareto_front(self.records, objectives)
+        out: List[SweepRecord] = []
+        for recs in self.group_by("workload").values():
+            out.extend(pareto_front(recs, objectives))
+        return sorted(out, key=lambda r: r.index)
+
+    # ----------------------------------------------------------- reporting
+    def rows(self) -> List[Dict[str, Any]]:
+        return [r.to_dict() for r in self.records]
+
+    def to_json(self, path: Optional[pathlib.Path] = None) -> str:
+        doc = {"stats": self.stats, "elapsed_s": round(self.elapsed_s, 3),
+               "n_records": len(self.records), "records": self.rows()}
+        text = json.dumps(doc, indent=1)
+        if path is not None:
+            pathlib.Path(path).write_text(text)
+        return text
+
+    def to_markdown(self, columns: Sequence[str] = _REPORT_COLUMNS,
+                    pareto_objectives: Sequence = ("energy_improvement",
+                                                   "speedup")) -> str:
+        """Human-readable sweep report: full table + per-workload Pareto set."""
+        def fmt(v: Any) -> str:
+            return f"{v:.3f}" if isinstance(v, float) else str(v)
+
+        lines = ["# DSE sweep report", "",
+                 f"{len(self.records)} design points; "
+                 f"{self.stats.get('trace_builds', '?')} trace analyses "
+                 f"({self.stats.get('trace_hits', 0)} cache hits); "
+                 f"{self.elapsed_s:.1f}s", "",
+                 "| " + " | ".join(columns) + " |",
+                 "|" + "|".join("---" for _ in columns) + "|"]
+        for r in self.records:
+            lines.append("| " + " | ".join(fmt(getattr(r, c))
+                                           for c in columns) + " |")
+        front = self.pareto(pareto_objectives)
+        names = [o if isinstance(o, str) else o[0] for o in pareto_objectives]
+        lines += ["", f"## Pareto frontier ({' vs '.join(names)}, "
+                      "per workload)", ""]
+        for r in front:
+            vals = ", ".join(f"{n}={fmt(getattr(r, n))}" for n in names)
+            lines.append(f"- **{r.workload}** {r.config_label}: {vals}")
+        return "\n".join(lines) + "\n"

@@ -1,0 +1,172 @@
+"""Typed sweep specification: the cross-product of the paper's design axes.
+
+Eva-CiM's design space (§VI-D/E, Figs. 14–16) spans four orthogonal axes:
+
+  * **workload**   — which benchmark program (Table IV),
+  * **cache**      — L1/L2 geometry (Fig. 14's three configurations),
+  * **cim_levels** — which cache levels host the CiM arrays (Fig. 15),
+  * **tech**       — the device technology, SRAM vs FeFET (Fig. 16 /
+                     Table III), plus the supported-op set it implies.
+
+A :class:`SweepSpace` enumerates the full cross-product as a deterministic,
+stable-ordered list of :class:`SweepPoint` records (workload-major, so all
+points sharing one expensive trace analysis are adjacent).  Each point can
+mint its own :class:`~repro.core.offload.OffloadConfig` for the selection
+phase; everything else on the point is pricing-phase input.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterator, List, Tuple, Union
+
+from repro.core.cache import (CacheConfig, L1_32K, L1_64K, L2_256K, L2_2M)
+from repro.core.device_model import TECHS
+from repro.core.isa import CIM_SET_FULL, CIM_SET_LOGIC, CIM_SET_STT
+from repro.core.offload import OffloadConfig
+
+# Named presets for the paper's swept values ---------------------------------
+CACHE_PRESETS: Dict[str, Tuple[CacheConfig, ...]] = {
+    "32K+256K": (L1_32K, L2_256K),
+    "64K+256K": (L1_64K, L2_256K),
+    "64K+2M": (L1_64K, L2_2M),
+}
+LEVEL_PRESETS: Dict[str, Tuple[str, ...]] = {
+    "L1_only": ("L1",),
+    "L2_only": ("L2",),
+    "both": ("L1", "L2"),
+}
+CIM_SETS = {
+    "logic": CIM_SET_LOGIC,
+    "stt": CIM_SET_STT,
+    "full": CIM_SET_FULL,
+}
+
+DEFAULT_CACHE = "32K+256K"       # trace_program's default (L1_32K, L2_256K)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheOption:
+    """One named cache configuration (hierarchy geometry)."""
+    name: str
+    levels: Tuple[CacheConfig, ...]
+
+    @classmethod
+    def of(cls, spec: Union[str, "CacheOption", Tuple[CacheConfig, ...]]
+           ) -> "CacheOption":
+        if isinstance(spec, CacheOption):
+            return spec
+        if isinstance(spec, str):
+            if spec not in CACHE_PRESETS:
+                raise KeyError(f"unknown cache preset {spec!r}; "
+                               f"known: {sorted(CACHE_PRESETS)}")
+            return cls(spec, CACHE_PRESETS[spec])
+        levels = tuple(spec)
+
+        def size_name(c: CacheConfig) -> str:
+            mb = 1024 * 1024
+            return f"{c.size // mb}M" if c.size >= mb else f"{c.size // 1024}K"
+
+        return cls("+".join(size_name(c) for c in levels), levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One fully-specified design point of the sweep."""
+    index: int                       # position in the deterministic ordering
+    workload: str
+    cache: CacheOption
+    cim_levels: Tuple[str, ...]
+    tech: str
+    cim_set: str = "stt"
+
+    @property
+    def analysis_key(self) -> Tuple:
+        """Key of the config-independent phase this point can reuse.
+
+        Keyed by the full cache geometry (not the display name): two
+        options with equal sizes but different associativity/banking must
+        not share a memoized trace."""
+        return (self.workload, self.cache.levels)
+
+    @property
+    def label(self) -> str:
+        lv = "+".join(self.cim_levels)
+        return (f"{self.workload}/{self.cache.name}/cim@{lv}"
+                f"/{self.tech}/{self.cim_set}")
+
+    def offload_config(self) -> OffloadConfig:
+        return OffloadConfig(cim_set=CIM_SETS[self.cim_set],
+                             cim_levels=self.cim_levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpace:
+    """Cross-product specification over the four design axes.
+
+    Axis values accept preset *names* (strings) wherever one exists, so the
+    common sweeps read like the paper:
+
+        SweepSpace(workloads=("KM", "BFS"),
+                   caches=("32K+256K", "64K+2M"),
+                   cim_levels=("L1_only", "both"),
+                   techs=("sram", "fefet"))
+    """
+    workloads: Tuple[str, ...]
+    caches: Tuple[Union[str, CacheOption], ...] = (DEFAULT_CACHE,)
+    cim_levels: Tuple[Union[str, Tuple[str, ...]], ...] = ("both",)
+    techs: Tuple[str, ...] = ("sram",)
+    cim_sets: Tuple[str, ...] = ("stt",)
+
+    def __post_init__(self):
+        for t in self.techs:
+            if t not in TECHS:
+                raise KeyError(f"unknown tech {t!r}; known: {sorted(TECHS)}")
+        for s in self.cim_sets:
+            if s not in CIM_SETS:
+                raise KeyError(f"unknown CiM op set {s!r}; "
+                               f"known: {sorted(CIM_SETS)}")
+        for lv in self._level_tuples():
+            for name in lv:
+                if name not in ("L1", "L2"):
+                    raise KeyError(f"unknown cache level {name!r}")
+        # materialize cache options eagerly so bad names fail at build time
+        object.__setattr__(self, "caches",
+                           tuple(CacheOption.of(c) for c in self.caches))
+
+    # ------------------------------------------------------------ helpers
+    def _level_tuples(self) -> List[Tuple[str, ...]]:
+        out = []
+        for lv in self.cim_levels:
+            if isinstance(lv, str):
+                if lv not in LEVEL_PRESETS:
+                    raise KeyError(f"unknown level preset {lv!r}; "
+                                   f"known: {sorted(LEVEL_PRESETS)}")
+                out.append(LEVEL_PRESETS[lv])
+            else:
+                out.append(tuple(lv))
+        return out
+
+    def __len__(self) -> int:
+        return (len(self.workloads) * len(self.caches)
+                * len(self.cim_levels) * len(self.techs) * len(self.cim_sets))
+
+    def points(self) -> List[SweepPoint]:
+        """Deterministic enumeration, workload-major then cache — all points
+        sharing one trace analysis are contiguous."""
+        levels = self._level_tuples()
+        out: List[SweepPoint] = []
+        for w, cache, lv, tech, cs in itertools.product(
+                self.workloads, self.caches, levels, self.techs,
+                self.cim_sets):
+            out.append(SweepPoint(index=len(out), workload=w, cache=cache,
+                                  cim_levels=lv, tech=tech, cim_set=cs))
+        return out
+
+    def __iter__(self) -> Iterator[SweepPoint]:
+        return iter(self.points())
+
+    def n_analyses(self) -> int:
+        """Number of expensive trace/IDG passes the sweep needs (vs
+        ``len(self)`` full pipeline runs without memoization)."""
+        return len(self.workloads) * len(self.caches)

@@ -293,7 +293,10 @@ def ssd_sequence(xh, B_t, C_t, la, state, chunk: int):
         sc = jnp.einsum("btn,bjn->btj", cc.astype(jnp.float32), bc.astype(jnp.float32))
         logw = b[:, :, None, :] - b[:, None, :, :]     # (B,t,j,H)
         causal = jnp.tril(jnp.ones((K, K), bool))[None, :, :, None]
-        w = jnp.where(causal, jnp.exp(logw), 0.0) * sc[..., None]
+        # mask BEFORE exp: non-causal logw is positive and overflows to inf,
+        # and where(c, inf, 0) back-propagates 0 * inf = NaN cotangents
+        logw = jnp.where(causal, logw, -jnp.inf)
+        w = jnp.exp(logw) * sc[..., None]
         y = jnp.einsum("btjh,bjhd->bthd", w, xc.astype(jnp.float32))
         # inter-chunk: y_t += exp(b_t) C_t . h_prev
         winter = jnp.exp(b)                            # (B,K,H)

@@ -1,0 +1,178 @@
+"""repro.dse: sweep-spec enumeration, analysis-cache memoization, Pareto
+extraction, and an end-to-end mini-sweep against the unmemoized pipeline."""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.core import OffloadConfig, profile_system, trace_program
+from repro.dse import (CacheOption, DSEEngine, SweepSpace, pareto_front)
+from repro.dse.space import CACHE_PRESETS, LEVEL_PRESETS
+from repro.workloads import build
+
+
+# ----------------------------------------------------------- enumeration
+def test_space_enumeration_deterministic():
+    space = SweepSpace(workloads=("KM", "NB"),
+                       caches=("32K+256K", "64K+2M"),
+                       cim_levels=("L1_only", "both"),
+                       techs=("sram", "fefet"))
+    pts1, pts2 = space.points(), space.points()
+    assert pts1 == pts2
+    assert len(pts1) == len(space) == 16
+    assert [p.index for p in pts1] == list(range(16))
+    # workload-major: all points sharing one analysis key are contiguous
+    keys = [p.analysis_key for p in pts1]
+    n_runs = len([k for k, _ in itertools.groupby(keys)])
+    assert n_runs == len(set(keys)) == 4
+    # first block is KM on the first cache
+    assert pts1[0].workload == "KM" and pts1[0].cache.name == "32K+256K"
+    assert pts1[0].tech == "sram" and pts1[1].tech == "fefet"
+
+
+def test_space_rejects_unknown_names():
+    with pytest.raises(KeyError):
+        SweepSpace(workloads=("KM",), caches=("1G+2G",)).points()
+    with pytest.raises(KeyError):
+        SweepSpace(workloads=("KM",), techs=("memristor",))
+    with pytest.raises(KeyError):
+        SweepSpace(workloads=("KM",), cim_sets=("everything",))
+    with pytest.raises(KeyError):
+        SweepSpace(workloads=("KM",), cim_levels=("L9_only",)).points()
+
+
+def test_cache_option_names_match_presets():
+    # display names stay consistent however the option was built (the
+    # analysis cache itself keys on the full geometry, not the name)
+    for name, levels in CACHE_PRESETS.items():
+        assert CacheOption.of(levels).name == name
+        assert CacheOption.of(name).levels == levels
+
+
+def test_analysis_key_distinguishes_same_size_different_assoc():
+    from repro.core.cache import CacheConfig, L2_256K
+    a = CacheOption.of((CacheConfig("L1", 32 * 1024, 4), L2_256K))
+    b = CacheOption.of((CacheConfig("L1", 32 * 1024, 8), L2_256K))
+    assert a.name == b.name                       # same sizes, same label...
+    pa = SweepSpace(workloads=("KM",), caches=(a,)).points()[0]
+    pb = SweepSpace(workloads=("KM",), caches=(b,)).points()[0]
+    assert pa.analysis_key != pb.analysis_key     # ...but never one trace
+
+
+def test_point_offload_config():
+    space = SweepSpace(workloads=("KM",), cim_levels=("L2_only",),
+                       cim_sets=("logic",))
+    (p,) = space.points()
+    cfg = p.offload_config()
+    assert cfg.cim_levels == ("L2",)
+    assert cfg.cim_set == frozenset({"and", "or", "xor"})
+
+
+# ------------------------------------------------------------ memoization
+def test_analysis_runs_once_per_workload():
+    """N configs over one workload => exactly one trace/IDG pass (the
+    tentpole guarantee) and one candidate selection per offload config."""
+    space = SweepSpace(workloads=("KM",),
+                       cim_levels=("L1_only", "L2_only", "both"),
+                       techs=("sram", "fefet"))
+    eng = DSEEngine(executor="thread", max_workers=4)
+    results = eng.run(space)
+    assert len(results) == 6
+    assert eng.analysis.trace_builds == 1
+    assert eng.analysis.offload_builds == 3          # one per level set
+    # tech axis is pricing-only: re-running adds zero analysis work
+    results2 = eng.run(space)
+    assert eng.analysis.trace_builds == 1
+    assert eng.analysis.offload_builds == 3
+    # per-run stats are deltas: the second run built nothing
+    assert results2.stats["trace_builds"] == 0
+    assert results2.stats["offload_builds"] == 0
+    assert [r.energy_improvement for r in results2] == \
+        [r.energy_improvement for r in results]
+
+
+def test_engine_matches_unmemoized_pipeline():
+    """Engine records == direct trace->select->price, point by point."""
+    space = SweepSpace(workloads=("NB",), caches=("32K+256K",),
+                       cim_levels=("L1_only", "both"), techs=("sram", "fefet"))
+    records = DSEEngine(executor="serial").run(space).records
+    fn, args = build("NB")
+    tr = trace_program(fn, *args, cache_levels=CACHE_PRESETS["32K+256K"])
+    for rec in records:
+        cfg = OffloadConfig(cim_levels=LEVEL_PRESETS[
+            {"L1": "L1_only", "L2": "L2_only", "L1+L2": "both"}[rec.cim_levels]])
+        rep = profile_system(tr, cfg, tech=rec.tech)
+        assert rec.energy_improvement == pytest.approx(rep.energy_improvement)
+        assert rec.speedup == pytest.approx(rep.speedup)
+        assert rec.macr == pytest.approx(rep.macr)
+
+
+# ----------------------------------------------------------------- pareto
+@dataclasses.dataclass
+class _Pt:
+    name: str
+    energy_improvement: float
+    speedup: float
+
+
+def test_pareto_hand_built():
+    pts = [_Pt("a", 2.0, 1.0),     # on the front (best energy)
+           _Pt("b", 1.5, 1.5),     # on the front (trade-off)
+           _Pt("c", 1.0, 2.0),     # on the front (best speedup)
+           _Pt("d", 1.4, 1.4),     # dominated by b
+           _Pt("e", 1.0, 2.0)]     # duplicate of c: kept (weak dominance)
+    front = pareto_front(pts, ("energy_improvement", "speedup"))
+    assert [p.name for p in front] == ["a", "b", "c", "e"]
+
+
+def test_pareto_min_objective_and_dicts():
+    rows = [{"cost": 1.0, "speedup": 1.0},
+            {"cost": 2.0, "speedup": 3.0},
+            {"cost": 2.0, "speedup": 2.0}]     # dominated (same cost, slower)
+    front = pareto_front(rows, (("cost", "min"), "speedup"))
+    assert front == rows[:2]
+    with pytest.raises(ValueError):
+        pareto_front(rows, (("cost", "sideways"),))
+    with pytest.raises(ValueError):
+        pareto_front(rows, ())
+
+
+def test_pareto_single_objective_is_argmax():
+    pts = [_Pt("a", 1.0, 9.0), _Pt("b", 3.0, 0.1), _Pt("c", 2.0, 5.0)]
+    front = pareto_front(pts, ("energy_improvement",))
+    assert [p.name for p in front] == ["b"]
+
+
+# ------------------------------------------------------------ end-to-end
+def test_mini_sweep_2x2x2_end_to_end():
+    """2 caches x 2 level sets x 2 techs over one workload: full engine run
+    with reporting, Pareto, and the exact analysis-cost accounting."""
+    space = SweepSpace(workloads=("NB",),
+                       caches=("32K+256K", "64K+256K"),
+                       cim_levels=("L1_only", "both"),
+                       techs=("sram", "fefet"))
+    eng = DSEEngine()
+    results = eng.run(space)
+    assert len(results) == 8
+    assert [r.index for r in results] == list(range(8))
+    st = results.stats
+    assert st["trace_builds"] == space.n_analyses() == 2
+    assert st["offload_builds"] == 4                 # 2 caches x 2 level sets
+
+    for r in results:
+        assert r.workload == "NB"
+        assert r.base_energy_pj > 0 and r.cim_energy_pj > 0
+        assert r.n_instructions > 0
+        assert 0.0 <= r.macr <= 1.0
+
+    best = results.best("energy_improvement")
+    assert best.energy_improvement == max(r.energy_improvement
+                                          for r in results)
+    front = results.pareto(("energy_improvement", "speedup"))
+    assert front and all(rec in results.records for rec in front)
+    assert best in front                              # argmax is never dominated
+
+    md = results.to_markdown()
+    assert "Pareto frontier" in md and "| NB |" in md
+    doc = results.to_json()
+    assert '"records"' in doc and '"energy_improvement"' in doc

@@ -100,8 +100,8 @@ _SUBPROC = textwrap.dedent("""
 
     arch = "%s"
     cfg = reduced_config(arch)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
     rules = shd.make_rules(cfg, mesh, shape)
     rng = jax.random.PRNGKey(0)
