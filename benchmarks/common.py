@@ -7,12 +7,16 @@ CSV artifacts under ``benchmarks/artifacts/``.
 All trace-driven benchmarks share a single :class:`repro.dse.AnalysisCache`
 (via :func:`engine` / :func:`cached_trace`), so across a full
 ``benchmarks.run`` each (workload, cache-config) pair is traced and
-IDG-analyzed exactly once no matter how many figures price it.
+IDG-analyzed exactly once no matter how many figures price it.  Set
+``EVA_CIM_CACHE_DIR=/some/dir`` to back that cache with a persistent
+:class:`repro.dse.AnalysisStore`: a second ``benchmarks.run`` then skips
+re-tracing entirely (the sweep reports print the store hit counters).
 """
 from __future__ import annotations
 
 import csv
 import json
+import os
 import pathlib
 from typing import Dict, List, Optional, Tuple
 
@@ -29,10 +33,11 @@ _ENGINE: Optional[DSEEngine] = None
 
 
 def engine() -> DSEEngine:
-    """Process-wide sweep engine (one shared analysis cache)."""
+    """Process-wide sweep engine (one shared analysis cache; backed by a
+    persistent store when ``EVA_CIM_CACHE_DIR`` is set)."""
     global _ENGINE
     if _ENGINE is None:
-        _ENGINE = DSEEngine()
+        _ENGINE = DSEEngine(store=os.environ.get("EVA_CIM_CACHE_DIR") or None)
     return _ENGINE
 
 

@@ -10,8 +10,9 @@ import sys
 import time
 
 from benchmarks import (fig12_macr_validation, fig13_macr, fig14_cache_cfg,
-                        fig15_levels, fig16_tech, roofline, table3_energy,
-                        table5_validation, table6_speedup, tpu_macr)
+                        fig15_levels, fig16_tech, fig17_host, roofline,
+                        table3_energy, table5_validation, table6_speedup,
+                        tpu_macr)
 
 ALL = {
     "table3": table3_energy,
@@ -22,6 +23,7 @@ ALL = {
     "fig14": fig14_cache_cfg,
     "fig15": fig15_levels,
     "fig16": fig16_tech,
+    "fig17": fig17_host,
     "tpu_macr": tpu_macr,
     "roofline": roofline,
 }

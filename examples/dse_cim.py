@@ -2,8 +2,8 @@
 
 Quickstart
 ==========
-A sweep is a typed cross-product over the paper's four design axes
-(workload, cache geometry, CiM level set, device technology); the engine
+A sweep is a typed cross-product over the paper's design axes (workload,
+cache geometry, CiM level set, device technology, host CPU); the engine
 memoizes the expensive trace/IDG analysis per (workload, cache) and fans
 the cheap pricing phase out over a worker pool::
 
@@ -26,11 +26,18 @@ Run this module for a guided tour over one workload::
 
     PYTHONPATH=src python examples/dse_cim.py --workload KM
     PYTHONPATH=src python examples/dse_cim.py --workload KM --report sweep.md
+
+``--cache-dir DIR`` persists every analysis artifact; a second invocation
+with the same directory performs zero trace builds.  ``--hosts`` adds the
+host-CPU axis (named presets from ``repro.core.host_model.HOST_PRESETS``)::
+
+    PYTHONPATH=src python examples/dse_cim.py --workload KM \\
+        --cache-dir ~/.cache/eva-cim --hosts A9-1GHz,inorder-1GHz,A9-2GHz
 """
 import argparse
 import sys
 
-from repro.dse import DSEEngine, SweepSpace
+from repro.dse import DSEEngine, HOST_PRESETS, SweepSpace
 from repro.workloads import WORKLOADS
 
 
@@ -39,17 +46,25 @@ def main(argv=None) -> int:
     ap.add_argument("--workload", default="KM", choices=sorted(WORKLOADS))
     ap.add_argument("--executor", default="thread",
                     choices=["thread", "process", "serial"])
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent AnalysisStore directory: repeated "
+                         "invocations load artifacts instead of re-tracing")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated host presets to sweep "
+                         f"(known: {','.join(HOST_PRESETS)})")
     ap.add_argument("--report", default=None,
                     help="write the markdown sweep report here")
     ap.add_argument("--json", default=None,
                     help="write structured sweep records here")
     args = ap.parse_args(argv)
 
-    engine = DSEEngine(executor=args.executor)
+    engine = DSEEngine(executor=args.executor, store=args.cache_dir)
+    hosts = tuple(args.hosts.split(",")) if args.hosts else (None,)
     space = SweepSpace(workloads=(args.workload,),
                        caches=("32K+256K", "64K+256K", "64K+2M"),
                        cim_levels=("L1_only", "L2_only", "both"),
-                       techs=("sram", "fefet"))
+                       techs=("sram", "fefet"),
+                       hosts=hosts)
     print(f"== {args.workload}: {len(space)} design points, "
           f"{space.n_analyses()} trace analyses ==")
     results = engine.run(space)
@@ -57,29 +72,45 @@ def main(argv=None) -> int:
     print(f"   done in {results.elapsed_s:.1f}s "
           f"(trace builds {st.get('trace_builds')}, "
           f"selection builds {st.get('offload_builds')})")
+    if args.cache_dir:
+        print(f"   store: {st.get('store_l1_hits', 0)} trace hits / "
+              f"{st.get('store_l2_hits', 0)} selection hits / "
+              f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
 
-    print("== cache-configuration slice (Fig. 14, CiM@L1+L2, SRAM) ==")
+    # the Fig. 14/15/16 slices fix the host axis at its first value
+    host0 = results.records[0].host
+
+    print(f"== cache-configuration slice (Fig. 14, CiM@L1+L2, SRAM) ==")
     for r in results:
-        if r.cim_levels == "L1+L2" and r.tech == "sram":
+        if r.cim_levels == "L1+L2" and r.tech == "sram" and r.host == host0:
             print(f"  {r.cache:10s} E-impr {r.energy_improvement:5.2f}x "
                   f"speedup {r.speedup:5.2f}x macr {r.macr:.3f}")
 
     print("== CiM level slice (Fig. 15, 32K+256K, SRAM) ==")
     for r in results:
-        if r.cache == "32K+256K" and r.tech == "sram":
+        if r.cache == "32K+256K" and r.tech == "sram" and r.host == host0:
             print(f"  {r.cim_levels:6s} E-impr {r.energy_improvement:5.2f}x "
                   f"speedup {r.speedup:5.2f}x")
 
     print("== technology slice (Fig. 16, 32K+256K, CiM@L1+L2) ==")
     sram_base = next(r.base_energy_pj for r in results
                      if r.cache == "32K+256K" and r.cim_levels == "L1+L2"
-                     and r.tech == "sram")
+                     and r.tech == "sram" and r.host == host0)
     for r in results:
-        if r.cache == "32K+256K" and r.cim_levels == "L1+L2":
+        if (r.cache == "32K+256K" and r.cim_levels == "L1+L2"
+                and r.host == host0):
             # paper normalizes to the SRAM non-CiM baseline
             print(f"  {r.tech:6s} E-impr vs SRAM-baseline "
                   f"{sram_base / r.cim_energy_pj:5.2f}x "
                   f"speedup {r.speedup:5.2f}x")
+
+    if args.hosts:
+        print("== host-model slice (32K+256K, CiM@L1+L2, SRAM) ==")
+        for r in results:
+            if (r.cache == "32K+256K" and r.cim_levels == "L1+L2"
+                    and r.tech == "sram"):
+                print(f"  {r.host:14s} E-impr {r.energy_improvement:5.2f}x "
+                      f"speedup {r.speedup:5.2f}x")
 
     front = results.pareto(("energy_improvement", "speedup"))
     print(f"== Pareto frontier (energy improvement vs speedup) ==")

@@ -2,12 +2,21 @@
 
 McPAT prices each committed instruction from per-component performance
 counters; our trace VM produces exactly those counters (instruction class,
-triggered functional unit, cache level per access).  The constants below
+triggered functional unit, cache level per access).  The default constants
 model an ARM Cortex-A9-class out-of-order core at 45 nm / 1 GHz — the
 paper's experimental platform (§VI).  They are calibration surrogates for
 McPAT output, sized so that core power at IPC ~1 lands in the A9's
 published 0.5–1 W envelope; the validation benchmark (Table V) checks the
 resulting CiM/non-CiM energy *ratios* against the paper.
+
+:data:`HOST_PRESETS` names the host-CPU design points the DSE sweeps
+(``SweepSpace(hosts=...)``): the paper varies the host to quantify how much
+of CiM's benefit depends on what it is attached to — a small in-order core
+leaves more of the memory wall for CiM to remove, while a wide/fast OoO
+core hides miss latency itself (and pays for it in pipeline energy).
+Frequency variants keep the micro-architecture but re-express the fixed
+DRAM/L2 nanosecond latencies in (more) core cycles and dilute per-cycle
+static energy, which shifts both the speedup and the static-energy term.
 """
 from __future__ import annotations
 
@@ -49,6 +58,11 @@ class HostModel:
     # pipeline stall" — cim_overlap is the unhidden fraction)
     cim_occupancy: float = 0.35
     cim_overlap: float = 0.2
+    # --- identity -----------------------------------------------------------
+    # preset name (sweep axis label) + clock, appended last so positional
+    # construction of the pricing constants above stays source-compatible
+    name: str = "A9-1GHz"
+    freq_ghz: float = 1.0
 
     def inst_energy_pj(self, inst: Inst) -> float:
         return self.pipeline_pj + self.unit_pj.get(inst.unit, 15.0)
@@ -62,5 +76,42 @@ class HostModel:
                 c += self.mem_stall * self.overlap
         return c
 
+    def runtime_ms(self, cycles: float) -> float:
+        return cycles / (self.freq_ghz * 1e9) * 1e3
+
 
 DEFAULT_HOST = HostModel()
+
+# ---------------------------------------------------------------------------
+# Named host design points for the DSE host axis (SweepSpace(hosts=...)).
+# All pricing constants are surrogates in the same calibration family as the
+# A9 baseline; what matters for the sweep is the *relative* movement of the
+# pipeline-energy / static-energy / stall-hiding trade-off across presets.
+# ---------------------------------------------------------------------------
+HOST_PRESETS: Dict[str, HostModel] = {
+    # the paper's §VI platform: dual-issue OoO A9 @ 1 GHz (== DEFAULT_HOST)
+    "A9-1GHz": DEFAULT_HOST,
+    # Cortex-A7-class in-order single-issue core: no rename/ROB (cheap
+    # pipeline, low leakage) but almost no miss-latency hiding, so stalls —
+    # and the CiM op latency beyond an L1 read — land nearly in full
+    "inorder-1GHz": HostModel(
+        pipeline_pj=80.0, static_pj_per_cycle=60.0,
+        base_cpi=1.15, l2_stall=8.0, mem_stall=60.0, overlap=0.9,
+        cim_occupancy=0.5, cim_overlap=0.65,
+        name="inorder-1GHz", freq_ghz=1.0),
+    # the same A9 micro-architecture clocked at 2 GHz: fixed-ns L2/DRAM
+    # latencies double in cycles (the memory wall bites harder) while the
+    # fixed leakage *power* spreads over twice as many cycles per second
+    "A9-2GHz": HostModel(
+        static_pj_per_cycle=75.0,
+        l2_stall=16.0, mem_stall=120.0,
+        name="A9-2GHz", freq_ghz=2.0),
+    # A15/"big"-class 3-wide OoO @ 2 GHz: a deep window hides most of the
+    # miss (and CiM) latency itself, at a steep pipeline + leakage premium —
+    # the host that gives CiM the least performance headroom
+    "big-OoO-2GHz": HostModel(
+        pipeline_pj=300.0, static_pj_per_cycle=260.0,
+        base_cpi=0.4, l2_stall=16.0, mem_stall=120.0, overlap=0.2,
+        cim_occupancy=0.3, cim_overlap=0.08,
+        name="big-OoO-2GHz", freq_ghz=2.0),
+}

@@ -106,6 +106,19 @@ class Inst:
         self.bank = None                # bank id at `level`
         self.mshr = False               # miss merged into an in-flight MSHR
 
+    # --- serialization hooks (repro.dse.store persists whole traces) -------
+    # Default __slots__ pickling emits a per-instance dict of slot names;
+    # a positional tuple is ~2x smaller and faster over 10^4-10^5 records.
+    def __getstate__(self) -> Tuple:
+        return (self.seq, self.op, self.unit, self.dtype, self.dst,
+                self.srcs, self.addr, self.size, self.level, self.hit,
+                self.bank, self.mshr)
+
+    def __setstate__(self, state: Tuple) -> None:
+        (self.seq, self.op, self.unit, self.dtype, self.dst, self.srcs,
+         self.addr, self.size, self.level, self.hit, self.bank,
+         self.mshr) = state
+
     @property
     def is_load(self) -> bool:
         return self.op == "load"

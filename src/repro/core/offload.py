@@ -28,6 +28,16 @@ from repro.core.isa import CIM_OP_CLASS, CIM_SET_STT, Inst, Trace
 
 _LEVEL_DEPTH = {"L1": 0, "L2": 1, "MEM": 2}
 
+# Version of the *analysis* semantics layered on top of the trace: IDG/flow
+# construction (core/idg.py), candidate selection (this module), and trace
+# reshaping (core/reshape.py).  Bump whenever any of them would produce
+# different artifacts for an unchanged trace — the on-disk analysis store
+# (repro.dse.store) keys flow and selection artifacts by this number, so a
+# selection-rule change invalidates persisted results instead of silently
+# re-serving pre-change numbers.  (Trace lowering changes are covered
+# separately by repro.core.trace.TRACE_VM_VERSION.)
+ANALYSIS_VERSION = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class OffloadConfig:
@@ -248,6 +258,17 @@ def analyze_trace(tr) -> TraceAnalysis:
     builder = IDGBuilder(tr.trace, tr.rut, tr.iht)
     flow = build_flow_index(tr.trace, tr.rut, tr.iht)
     return TraceAnalysis(tr.trace, tr.rut, tr.iht, builder, flow)
+
+
+def rehydrate_analysis(tr, flow: FlowIndex) -> TraceAnalysis:
+    """Reassemble a :class:`TraceAnalysis` from persisted artifacts.
+
+    The only *derived* table worth storing is the :class:`FlowIndex`
+    (:class:`IDGBuilder` is a stateless view over trace/RUT/IHT), so the
+    on-disk analysis store saves ``(TraceResult, FlowIndex)`` and this hook
+    rebuilds the full analysis without re-walking the trace."""
+    return TraceAnalysis(tr.trace, tr.rut, tr.iht,
+                         IDGBuilder(tr.trace, tr.rut, tr.iht), flow)
 
 
 def select_candidates(trace: Trace, rut, iht,

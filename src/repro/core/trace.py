@@ -36,6 +36,14 @@ import numpy as np
 from repro.core.cache import CacheConfig, CacheHierarchy, L1_32K, L2_256K
 from repro.core.isa import (SRC_IMM, SRC_REG, U_BRANCH, Inst, Trace, unit_for)
 
+# Version of the trace VM's *observable lowering semantics*.  Bump whenever a
+# change alters the committed instruction stream for an unchanged program
+# (new lowering rules, register-allocator or arena-layout changes, cache
+# model fixes...).  The on-disk analysis store (repro.dse.store) keys every
+# persisted artifact by this number, so stale traces from an older VM are
+# invalidated instead of silently re-priced.
+TRACE_VM_VERSION = 1
+
 # ======================================================================
 # Values: concrete data + an address map (None => immediate / generated)
 # ======================================================================

@@ -15,6 +15,23 @@ remaining replicated dimension across the data axis (ZeRO-1-style moment
 sharding), and ``batch_input_shardings`` splits the leading batch dimension
 across the data axis.  Every rule degrades to replication when a dimension
 does not divide evenly, so reduced CPU configs lower unchanged.
+
+Usage::
+
+    from repro.dist import sharding
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rules = sharding.make_rules(cfg, mesh)            # logical -> mesh axes
+    with sharding.use_rules(mesh, rules):
+        out = model(params, batch)        # shard() calls now constrain
+
+    pspecs = sharding.param_specs(cfg, mesh, params_shape)
+    ospecs = sharding.opt_state_specs(cfg, mesh, params_shape, pspecs)
+    inputs = sharding.batch_input_shardings(mesh, batch_spec, rules)
+
+The trace VM and single-device tests never enter ``use_rules``, so every
+``shard`` annotation is the identity there — the same model code runs on
+the Eva-CiM analysis pipeline and on an 8-device mesh unchanged.
 """
 from __future__ import annotations
 

@@ -6,10 +6,13 @@ energy/performance trade-off.  This package turns the ad-hoc loops of the
 early examples into a subsystem:
 
   * :mod:`repro.dse.space`   — typed sweep specification (cross-product
-    enumeration with named presets for the paper's swept values),
+    enumeration with named presets for the paper's swept values, host-CPU
+    axis included),
   * :mod:`repro.dse.engine`  — executor with a layered analysis cache
     (trace/IDG once per workload+cache, candidate selection once per
     offload config, pricing per point) and thread/process fan-out,
+  * :mod:`repro.dse.store`   — persistent content-addressed artifact store
+    extending the analysis cache across processes and CLI invocations,
   * :mod:`repro.dse.results` — structured records, JSON/markdown reports,
   * :mod:`repro.dse.pareto`  — Pareto-frontier extraction over arbitrary
     objective sets.
@@ -21,19 +24,24 @@ Quickstart::
     space = SweepSpace(workloads=("KM", "BFS"),
                        caches=("32K+256K", "64K+2M"),
                        cim_levels=("L1_only", "both"),
-                       techs=("sram", "fefet"))
-    results = DSEEngine().run(space)
+                       techs=("sram", "fefet"),
+                       hosts=("A9-1GHz", "inorder-1GHz"))
+    results = DSEEngine(store="~/.cache/eva-cim").run(space)
     print(results.best("energy_improvement", workload="KM").config_label)
     print(results.to_markdown())
 """
+from repro.core.host_model import HOST_PRESETS
 from repro.dse.engine import AnalysisCache, DSEEngine
 from repro.dse.pareto import dominates, objective_vector, pareto_front
 from repro.dse.results import SweepRecord, SweepResults
 from repro.dse.space import (CACHE_PRESETS, CIM_SETS, LEVEL_PRESETS,
-                             CacheOption, SweepPoint, SweepSpace)
+                             CacheOption, HostOption, SweepPoint, SweepSpace)
+from repro.dse.store import AnalysisStore, workload_fingerprint
 
 __all__ = [
-    "AnalysisCache", "DSEEngine", "dominates", "objective_vector",
-    "pareto_front", "SweepRecord", "SweepResults", "CACHE_PRESETS",
-    "CIM_SETS", "LEVEL_PRESETS", "CacheOption", "SweepPoint", "SweepSpace",
+    "AnalysisCache", "AnalysisStore", "DSEEngine", "dominates",
+    "objective_vector", "pareto_front", "SweepRecord", "SweepResults",
+    "CACHE_PRESETS", "CIM_SETS", "HOST_PRESETS", "LEVEL_PRESETS",
+    "CacheOption", "HostOption", "SweepPoint", "SweepSpace",
+    "workload_fingerprint",
 ]

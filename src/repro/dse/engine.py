@@ -13,30 +13,39 @@ costs and very different dependence on the swept axes:
 
 :class:`AnalysisCache` memoizes the first two layers by their exact
 dependence keys, so a Fig. 16 technology sweep re-runs *nothing* but
-pricing, and a Fig. 15 level sweep re-runs selection only.  The
-:class:`DSEEngine` walks a :class:`~repro.dse.space.SweepSpace` in
-deterministic order, warms the cache once per analysis key, and fans the
-cheap pricing phase out over a worker pool ("thread", "process", or
-"serial") — results always come back in SweepPoint order regardless of
-executor scheduling.
+pricing, and a Fig. 15 level sweep re-runs selection only.  Backing the
+cache with a persistent :class:`~repro.dse.store.AnalysisStore`
+(``AnalysisCache(store=...)`` / ``DSEEngine(store=...)``) extends both
+memo layers across *processes*: repeated CLI sweeps and spawned
+``executor="process"`` workers load the artifacts from disk instead of
+re-tracing.  The :class:`DSEEngine` walks a
+:class:`~repro.dse.space.SweepSpace` in deterministic order, warms the
+cache once per analysis key, and fans the cheap pricing phase out over a
+worker pool ("thread", "process", or "serial") — results always come back
+in SweepPoint order regardless of executor scheduling.
 """
 from __future__ import annotations
 
 import multiprocessing
 import os
+import pathlib
+import shutil
+import tempfile
 import threading
 import time
+import weakref
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.host_model import DEFAULT_HOST, HostModel
 from repro.core.offload import (OffloadConfig, OffloadResult, TraceAnalysis,
-                                analyze_trace)
+                                analyze_trace, rehydrate_analysis)
 from repro.core.profiler import profile_system
 from repro.core.reshape import ReshapedTrace, reshape
 from repro.core.trace import TraceResult, trace_program
 from repro.dse.results import SweepRecord, SweepResults
-from repro.dse.space import CacheOption, SweepPoint, SweepSpace
+from repro.dse.space import CacheOption, HostOption, SweepPoint, SweepSpace
+from repro.dse.store import AnalysisStore
 
 
 class AnalysisCache:
@@ -46,9 +55,20 @@ class AnalysisCache:
     Layer 2 — ``(layer-1 key, offload config)`` -> selected candidates +
     reshaped trace.  Hit/build counters are exposed for tests and reports
     (the "trace analysis ran exactly once per workload" guarantee).
+
+    ``store`` (an :class:`~repro.dse.store.AnalysisStore` or a directory
+    path) layers an on-disk lookup between the in-memory memo and a fresh
+    build: misses consult the store first, and every artifact built here is
+    persisted, so the build counters stay an honest measure of *global*
+    analysis work — a warm store means ``trace_builds == 0`` even in a new
+    process.
     """
 
-    def __init__(self):
+    def __init__(self, store: Optional[Union[AnalysisStore, str,
+                                             pathlib.Path]] = None):
+        if store is not None and not isinstance(store, AnalysisStore):
+            store = AnalysisStore(store)
+        self.store = store
         self._traces: Dict[Tuple, TraceResult] = {}
         self._analyses: Dict[Tuple, TraceAnalysis] = {}
         self._offloads: Dict[Tuple, Tuple[OffloadResult, ReshapedTrace]] = {}
@@ -77,11 +97,23 @@ class AnalysisCache:
                 if hit is not None:
                     self.trace_hits += 1
                     return hit
+            if self.store is not None:
+                loaded = self.store.load_layer1(workload, cache.levels)
+                if loaded is not None:
+                    tr, flow = loaded
+                    with self._lock:
+                        self._traces[key] = tr
+                        if flow is not None and key not in self._analyses:
+                            self._analyses[key] = rehydrate_analysis(tr, flow)
+                    return tr
+            with self._lock:
                 self.trace_builds += 1
             fn, args = build(workload)
             tr = trace_program(fn, *args, cache_levels=cache.levels)
             with self._lock:
                 self._traces[key] = tr
+            if self.store is not None:
+                self.store.save_layer1(workload, cache.levels, tr)
             return tr
 
     def trace_analysis(self, workload: str, cache: CacheOption
@@ -94,9 +126,18 @@ class AnalysisCache:
                 hit = self._analyses.get(key)
             if hit is not None:
                 return hit
-            analysis = analyze_trace(self.trace(workload, cache))
+            tr = self.trace(workload, cache)
+            with self._lock:               # a store hit may have rehydrated it
+                hit = self._analyses.get(key)
+            if hit is not None:
+                return hit
+            analysis = analyze_trace(tr)
             with self._lock:
                 self._analyses[key] = analysis
+            if self.store is not None:
+                # upgrade the layer-1 artifact in place: trace + flow tables
+                self.store.save_layer1(workload, cache.levels, tr,
+                                       flow=analysis.flow)
             return analysis
 
     # ------------------------------------------------------------ layer 2
@@ -111,51 +152,82 @@ class AnalysisCache:
                 if hit is not None:
                     self.offload_hits += 1
                     return hit
+            if self.store is not None:
+                loaded = self.store.load_layer2(workload, cache.levels, cfg)
+                if loaded is not None:
+                    with self._lock:
+                        self._offloads[key] = loaded
+                    return loaded
+            with self._lock:
                 self.offload_builds += 1
             analysis = self.trace_analysis(workload, cache)
             result = analysis.select(cfg)
             reshaped = reshape(analysis.trace, result)
             with self._lock:
                 self._offloads[key] = (result, reshaped)
+            if self.store is not None:
+                self.store.save_layer2(workload, cache.levels, cfg,
+                                       result, reshaped)
             return result, reshaped
 
     def stats(self) -> Dict[str, int]:
-        return {"trace_builds": self.trace_builds,
-                "trace_hits": self.trace_hits,
-                "offload_builds": self.offload_builds,
-                "offload_hits": self.offload_hits}
+        out = {"trace_builds": self.trace_builds,
+               "trace_hits": self.trace_hits,
+               "offload_builds": self.offload_builds,
+               "offload_hits": self.offload_hits}
+        if self.store is not None:
+            out.update(self.store.stats())
+        return out
 
 
 # ======================================================================
 # Engine
 # ======================================================================
-_WORKER_CACHE: Optional[AnalysisCache] = None   # per-process, for "process"
+# Per-process worker caches for "process" mode, keyed by the store they
+# route through (workers of one run all see the same store, but a process
+# pool can outlive one engine/run).
+_WORKER_CACHES: Dict[Tuple[Optional[str], Optional[int]], AnalysisCache] = {}
 
 
-def _worker_chunk(points: Sequence[SweepPoint], host: HostModel
+def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
+                  store_root: Optional[str] = None,
+                  store_version: Optional[int] = None
                   ) -> Tuple[List[SweepRecord], Dict[str, int]]:
-    """Price a run of points inside one process-pool worker (the worker
-    keeps its own AnalysisCache across chunks, so one trace per workload
-    *per worker* — chunks are grouped by analysis key to preserve that).
-    Returns the records plus this chunk's delta of the cache counters, so
-    the parent can report true build totals across all workers."""
-    global _WORKER_CACHE
-    if _WORKER_CACHE is None:
-        _WORKER_CACHE = AnalysisCache()
-    before = _WORKER_CACHE.stats()
-    records = [_evaluate(_WORKER_CACHE, p, host) for p in points]
-    delta = {k: v - before[k] for k, v in _WORKER_CACHE.stats().items()}
+    """Price a run of points inside one process-pool worker.
+
+    Workers route every analysis miss through the shared on-disk
+    :class:`~repro.dse.store.AnalysisStore` at ``store_root``: the first
+    worker to need a key builds it once and publishes the artifact, every
+    other process (and every later run) loads it — one *global* analysis
+    per key, not one per worker.  Returns the records plus this chunk's
+    delta of the cache+store counters, so the parent can report true build
+    totals across all workers."""
+    cache_key = (store_root, store_version)
+    cache = _WORKER_CACHES.get(cache_key)
+    if cache is None:
+        store = (AnalysisStore(store_root, version=store_version)
+                 if store_root is not None else None)
+        cache = _WORKER_CACHES[cache_key] = AnalysisCache(store=store)
+    before = cache.stats()
+    records = [_evaluate(cache, p, host) for p in points]
+    delta = {k: v - before.get(k, 0) for k, v in cache.stats().items()}
     return records, delta
 
 
 def _evaluate(cache: AnalysisCache, point: SweepPoint, host: HostModel
               ) -> SweepRecord:
+    if point.host is not None:                   # host axis: point overrides
+        host = point.host.model
+        name = point.host.name
+    else:
+        # collision-safe label for a custom engine-default model too
+        name = HostOption.of(host).name
     tr = cache.trace(point.workload, point.cache)
     result, reshaped = cache.offload(point.workload, point.cache,
                                      point.offload_config())
     rep = profile_system(tr, tech=point.tech, host=host,
                          offload=result, reshaped=reshaped)
-    return SweepRecord.from_report(point, rep)
+    return SweepRecord.from_report(point, rep, host=host, host_name=name)
 
 
 class DSEEngine:
@@ -167,24 +239,55 @@ class DSEEngine:
         GIL-bound, but trace analysis never repeats: exactly one per
         (workload, cache) per engine).
       * ``"process"`` — points are chunked by analysis key and each chunk
-        runs in a spawned worker process with a per-process cache (full
-        CPU parallelism across workloads, at most one analysis per key
-        per worker).  Spawn semantics apply: call it from a real module
-        (under ``if __name__ == "__main__":`` in scripts), not stdin.
+        runs in a spawned worker process (full CPU parallelism across
+        workloads).  Workers share artifacts through an on-disk
+        :class:`~repro.dse.store.AnalysisStore` — the engine's ``store``
+        if it has one, else a per-engine scratch store — so every analysis
+        key is built exactly once *globally*, including across repeated
+        ``run()`` calls.  Spawn semantics apply: call it from a real
+        module (under ``if __name__ == "__main__":`` in scripts), not
+        stdin.
       * ``"serial"`` — no pool at all; useful for debugging and exact
         cost accounting.
+
+    ``store`` — a persistent :class:`~repro.dse.store.AnalysisStore` (or a
+    directory path) shared across processes and invocations; shorthand for
+    ``cache=AnalysisCache(store=...)``.
+
+    ``host`` — the default :class:`~repro.core.host_model.HostModel` used
+    to price points that do not carry their own (a
+    ``SweepSpace(hosts=...)`` axis overrides it per point).
     """
 
     def __init__(self, cache: Optional[AnalysisCache] = None,
                  host: HostModel = DEFAULT_HOST,
                  executor: str = "thread",
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 store: Optional[Union[AnalysisStore, str,
+                                       pathlib.Path]] = None):
         if executor not in ("thread", "process", "serial"):
             raise ValueError(f"unknown executor {executor!r}")
-        self.analysis = cache or AnalysisCache()
+        if cache is not None and store is not None:
+            raise ValueError("pass either cache= or store= (to combine them, "
+                             "build AnalysisCache(store=...) yourself)")
+        self.analysis = cache or AnalysisCache(store=store)
         self.host = host
         self.executor = executor
         self.max_workers = max_workers or min(8, os.cpu_count() or 1)
+        self._scratch_store: Optional[AnalysisStore] = None
+
+    def _worker_store(self) -> AnalysisStore:
+        """Store handed to process workers: the engine's persistent one, or
+        a lazily created per-engine scratch directory (cleaned up with the
+        engine) so multi-process sweeps never rebuild an analysis key —
+        not across workers, and not across repeated ``run()`` calls."""
+        if self.analysis.store is not None:
+            return self.analysis.store
+        if self._scratch_store is None:
+            tmp = tempfile.mkdtemp(prefix="evacim-scratch-store-")
+            self._scratch_store = AnalysisStore(tmp)
+            weakref.finalize(self, shutil.rmtree, tmp, True)
+        return self._scratch_store
 
     # ------------------------------------------------------------ pieces
     def evaluate(self, point: SweepPoint) -> SweepRecord:
@@ -216,11 +319,13 @@ class DSEEngine:
                 records[p.index] = self.evaluate(p)
         elif self.executor == "process":
             chunks = self._chunks(points)
+            store = self._worker_store()
             # spawn, not fork: the parent holds live jax/XLA threads
             ctx = multiprocessing.get_context("spawn")
             with ProcessPoolExecutor(max_workers=self.max_workers,
                                      mp_context=ctx) as pool:
-                futs = [pool.submit(_worker_chunk, c, self.host)
+                futs = [pool.submit(_worker_chunk, c, self.host,
+                                    str(store.root), store.version)
                         for c in chunks]
                 worker_stats = {}
                 for fut in futs:
@@ -243,6 +348,7 @@ class DSEEngine:
         # report the shared-cache counter delta, process mode the summed
         # per-worker deltas (each chunk is one analysis key, so they agree)
         stats = worker_stats if worker_stats is not None else {
-            k: v - stats_before[k] for k, v in self.analysis.stats().items()}
+            k: v - stats_before.get(k, 0)
+            for k, v in self.analysis.stats().items()}
         return SweepResults(records=list(records), stats=stats,
                             elapsed_s=time.perf_counter() - t0)

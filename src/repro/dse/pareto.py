@@ -1,10 +1,27 @@
 """Pareto-frontier extraction over arbitrary objectives.
 
+The DSE engine's reporting question — "which design points are *worth*
+anything?" — is multi-objective: the paper trades energy improvement
+against speedup (and, implicitly, area/technology).  A point is kept iff
+no other point is at least as good on every objective and strictly better
+on one (:func:`dominates` over sign-normalized vectors).
+
 Works on any records (dataclasses, dicts, plain objects): objectives are
-named attributes/keys, each maximized by default or minimized when given as
-``(name, "min")``.  Output is deterministic — input order is preserved —
-and duplicate-valued points are all kept (they dominate each other weakly
-but strictly dominate nothing).
+named attributes/keys, each maximized by default or minimized when given
+as ``(name, "min")``.  Output is deterministic — input order is preserved
+— and duplicate-valued points are all kept (they dominate each other
+weakly but strictly dominate nothing).
+
+Usage::
+
+    from repro.dse import pareto_front
+
+    front = pareto_front(results.records,
+                         ("energy_improvement", "speedup"))
+    cheap = pareto_front(rows, (("cim_energy_pj", "min"), "speedup"))
+
+:meth:`repro.dse.results.SweepResults.pareto` wraps this per-workload (a
+KM design point should not dominate a BFS one).
 """
 from __future__ import annotations
 

@@ -4,7 +4,18 @@ One :class:`SweepRecord` per evaluated :class:`~repro.dse.space.SweepPoint`,
 carrying the paper's reported metrics (energy improvement, speedup, MACR,
 Table VI ratios) plus the raw energies/cycles so derived normalizations
 (e.g. Fig. 16's "vs the SRAM non-CiM baseline") can be computed after the
-sweep without re-running anything.
+sweep without re-running anything.  Records are plain floats/strings —
+picklable across the process-pool boundary and JSON-able as-is — and each
+carries the name of the host model it was priced under, so host-axis
+sweeps (``SweepSpace(hosts=...)``) stay distinguishable all the way into
+the Pareto/markdown reports.
+
+:class:`SweepResults` wraps the record list (always in SweepPoint order,
+whatever executor scheduling produced it) together with the run's cost
+accounting: ``stats`` holds the analysis-cache build/hit counters — and,
+when the engine is backed by a persistent
+:class:`~repro.dse.store.AnalysisStore`, the store's hit/write counters —
+which is how benchmarks *prove* a warm sweep did zero trace builds.
 """
 from __future__ import annotations
 
@@ -13,6 +24,7 @@ import json
 import pathlib
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.core.host_model import DEFAULT_HOST, HostModel
 from repro.core.profiler import SystemReport
 from repro.dse.pareto import pareto_front
 from repro.dse.space import SweepPoint
@@ -28,6 +40,7 @@ class SweepRecord:
     cim_levels: str                      # "L1+L2" style
     tech: str
     cim_set: str
+    host: str                            # host-model preset it was priced under
     energy_improvement: float
     speedup: float
     macr: float
@@ -36,6 +49,8 @@ class SweepRecord:
     cim_energy_pj: float
     base_cycles: float
     cim_cycles: float
+    base_runtime_ms: float               # cycles / host clock (freq_ghz)
+    cim_runtime_ms: float
     processor_ratio: float
     cache_ratio: float
     n_instructions: int
@@ -44,7 +59,18 @@ class SweepRecord:
     n_cim_ops: int
 
     @classmethod
-    def from_report(cls, point: SweepPoint, rep: SystemReport) -> "SweepRecord":
+    def from_report(cls, point: SweepPoint, rep: SystemReport,
+                    host: Optional[HostModel] = None,
+                    host_name: Optional[str] = None) -> "SweepRecord":
+        """``host`` is the model the report was priced under (wall-clock
+        runtimes come from its clock); ``host_name`` overrides the record
+        label (e.g. a HostOption's collision-safe name)."""
+        if host is None:
+            host = (point.host.model if point.host is not None
+                    else DEFAULT_HOST)
+        if host_name is None:
+            host_name = (point.host.name if point.host is not None
+                         else host.name)
         return cls(
             index=point.index,
             workload=point.workload,
@@ -52,6 +78,7 @@ class SweepRecord:
             cim_levels="+".join(point.cim_levels),
             tech=point.tech,
             cim_set=point.cim_set,
+            host=host_name,
             energy_improvement=rep.energy_improvement,
             speedup=rep.speedup,
             macr=rep.macr,
@@ -60,6 +87,8 @@ class SweepRecord:
             cim_energy_pj=rep.cim.total,
             base_cycles=rep.base_cycles,
             cim_cycles=rep.cim_cycles,
+            base_runtime_ms=host.runtime_ms(rep.base_cycles),
+            cim_runtime_ms=host.runtime_ms(rep.cim_cycles),
             processor_ratio=rep.processor_ratio,
             cache_ratio=rep.cache_ratio,
             n_instructions=rep.n_instructions,
@@ -73,10 +102,11 @@ class SweepRecord:
 
     @property
     def config_label(self) -> str:
-        return f"{self.cache}/cim@{self.cim_levels}/{self.tech}/{self.cim_set}"
+        return (f"{self.cache}/cim@{self.cim_levels}/{self.tech}"
+                f"/{self.cim_set}/{self.host}")
 
 
-_REPORT_COLUMNS = ("workload", "cache", "cim_levels", "tech",
+_REPORT_COLUMNS = ("workload", "cache", "cim_levels", "tech", "host",
                    "energy_improvement", "speedup", "macr")
 
 

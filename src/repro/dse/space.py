@@ -1,27 +1,32 @@
 """Typed sweep specification: the cross-product of the paper's design axes.
 
-Eva-CiM's design space (§VI-D/E, Figs. 14–16) spans four orthogonal axes:
+Eva-CiM's design space (§VI-D/E, Figs. 14–16) spans five orthogonal axes:
 
   * **workload**   — which benchmark program (Table IV),
   * **cache**      — L1/L2 geometry (Fig. 14's three configurations),
   * **cim_levels** — which cache levels host the CiM arrays (Fig. 15),
   * **tech**       — the device technology, SRAM vs FeFET (Fig. 16 /
-                     Table III), plus the supported-op set it implies.
+                     Table III), plus the supported-op set it implies,
+  * **host**       — the host-CPU model the CiM arrays are attached to
+                     (§V-C/§VI-D host/CiM interaction; named presets in
+                     :data:`repro.core.host_model.HOST_PRESETS`).
 
 A :class:`SweepSpace` enumerates the full cross-product as a deterministic,
 stable-ordered list of :class:`SweepPoint` records (workload-major, so all
 points sharing one expensive trace analysis are adjacent).  Each point can
 mint its own :class:`~repro.core.offload.OffloadConfig` for the selection
-phase; everything else on the point is pricing-phase input.
+phase; everything else on the point — tech *and* host — is pricing-phase
+input, so neither axis ever adds analysis work.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterator, List, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 from repro.core.cache import (CacheConfig, L1_32K, L1_64K, L2_256K, L2_2M)
 from repro.core.device_model import TECHS
+from repro.core.host_model import HOST_PRESETS, HostModel
 from repro.core.isa import CIM_SET_FULL, CIM_SET_LOGIC, CIM_SET_STT
 from repro.core.offload import OffloadConfig
 
@@ -71,6 +76,29 @@ class CacheOption:
 
 
 @dataclasses.dataclass(frozen=True)
+class HostOption:
+    """One named host-CPU configuration (pricing-phase axis value)."""
+    name: str
+    model: HostModel
+
+    @classmethod
+    def of(cls, spec: Union[str, "HostOption", HostModel]) -> "HostOption":
+        if isinstance(spec, HostOption):
+            return spec
+        if isinstance(spec, HostModel):
+            # a hand-built model may carry a preset's (default) name with
+            # different constants — label it distinctly so records/reports
+            # never conflate it with the real preset
+            name = (spec.name if HOST_PRESETS.get(spec.name) == spec
+                    else f"custom({spec.name})")
+            return cls(name, spec)
+        if spec not in HOST_PRESETS:
+            raise KeyError(f"unknown host preset {spec!r}; "
+                           f"known: {sorted(HOST_PRESETS)}")
+        return cls(spec, HOST_PRESETS[spec])
+
+
+@dataclasses.dataclass(frozen=True)
 class SweepPoint:
     """One fully-specified design point of the sweep."""
     index: int                       # position in the deterministic ordering
@@ -79,6 +107,7 @@ class SweepPoint:
     cim_levels: Tuple[str, ...]
     tech: str
     cim_set: str = "stt"
+    host: Optional[HostOption] = None    # None: the engine's default host
 
     @property
     def analysis_key(self) -> Tuple:
@@ -92,8 +121,9 @@ class SweepPoint:
     @property
     def label(self) -> str:
         lv = "+".join(self.cim_levels)
-        return (f"{self.workload}/{self.cache.name}/cim@{lv}"
+        base = (f"{self.workload}/{self.cache.name}/cim@{lv}"
                 f"/{self.tech}/{self.cim_set}")
+        return base if self.host is None else f"{base}/{self.host.name}"
 
     def offload_config(self) -> OffloadConfig:
         return OffloadConfig(cim_set=CIM_SETS[self.cim_set],
@@ -110,13 +140,18 @@ class SweepSpace:
         SweepSpace(workloads=("KM", "BFS"),
                    caches=("32K+256K", "64K+2M"),
                    cim_levels=("L1_only", "both"),
-                   techs=("sram", "fefet"))
+                   techs=("sram", "fefet"),
+                   hosts=("A9-1GHz", "inorder-1GHz", "big-OoO-2GHz"))
+
+    The ``hosts`` default of ``(None,)`` means "price with the engine's
+    default host" — existing four-axis sweeps enumerate identically.
     """
     workloads: Tuple[str, ...]
     caches: Tuple[Union[str, CacheOption], ...] = (DEFAULT_CACHE,)
     cim_levels: Tuple[Union[str, Tuple[str, ...]], ...] = ("both",)
     techs: Tuple[str, ...] = ("sram",)
     cim_sets: Tuple[str, ...] = ("stt",)
+    hosts: Tuple[Union[str, HostOption, HostModel, None], ...] = (None,)
 
     def __post_init__(self):
         for t in self.techs:
@@ -130,9 +165,12 @@ class SweepSpace:
             for name in lv:
                 if name not in ("L1", "L2"):
                     raise KeyError(f"unknown cache level {name!r}")
-        # materialize cache options eagerly so bad names fail at build time
+        # materialize options eagerly so bad names fail at build time
         object.__setattr__(self, "caches",
                            tuple(CacheOption.of(c) for c in self.caches))
+        object.__setattr__(self, "hosts",
+                           tuple(None if h is None else HostOption.of(h)
+                                 for h in self.hosts))
 
     # ------------------------------------------------------------ helpers
     def _level_tuples(self) -> List[Tuple[str, ...]]:
@@ -149,18 +187,22 @@ class SweepSpace:
 
     def __len__(self) -> int:
         return (len(self.workloads) * len(self.caches)
-                * len(self.cim_levels) * len(self.techs) * len(self.cim_sets))
+                * len(self.cim_levels) * len(self.techs)
+                * len(self.cim_sets) * len(self.hosts))
 
     def points(self) -> List[SweepPoint]:
         """Deterministic enumeration, workload-major then cache — all points
-        sharing one trace analysis are contiguous."""
+        sharing one trace analysis are contiguous.  The host axis iterates
+        innermost: it is pricing-only, so host variants of one design point
+        stay adjacent and reuse every cached artifact."""
         levels = self._level_tuples()
         out: List[SweepPoint] = []
-        for w, cache, lv, tech, cs in itertools.product(
+        for w, cache, lv, tech, cs, host in itertools.product(
                 self.workloads, self.caches, levels, self.techs,
-                self.cim_sets):
+                self.cim_sets, self.hosts):
             out.append(SweepPoint(index=len(out), workload=w, cache=cache,
-                                  cim_levels=lv, tech=tech, cim_set=cs))
+                                  cim_levels=lv, tech=tech, cim_set=cs,
+                                  host=host))
         return out
 
     def __iter__(self) -> Iterator[SweepPoint]:

@@ -1,0 +1,272 @@
+"""Persistent, content-addressed analysis store — cross-process memoization.
+
+The in-memory :class:`~repro.dse.engine.AnalysisCache` makes one *engine*
+cheap; this module makes repeated *invocations* cheap.  An
+:class:`AnalysisStore` persists the two expensive sweep layers on disk:
+
+  Layer 1 — traced program (the CIQ + RUT/IHT + cache state) and the
+  IDG/flow tables, keyed by ``(workload fingerprint, cache geometry,
+  trace-VM version)``;
+  Layer 2 — accepted candidates + the reshaped trace, keyed by the layer-1
+  key plus the full :class:`~repro.core.offload.OffloadConfig`.
+
+Keys are content-addressed: the workload fingerprint hashes the builder
+module's *source*, the cache key is the full geometry (size/assoc/banks/
+MSHRs, never the display name), every key mixes in
+:data:`~repro.core.trace.TRACE_VM_VERSION`, and the flow/selection
+artifacts additionally mix in
+:data:`~repro.core.offload.ANALYSIS_VERSION` (IDG/selection/reshape
+semantics) — change the workload code, the trace VM's lowering, or the
+analysis algorithms and the old artifacts become unreachable instead of
+silently wrong.
+
+Durability rules:
+
+  * writes are atomic (temp file + ``os.replace``), so a concurrent reader
+    never sees a partial artifact and concurrent writers of one key settle
+    on one complete file;
+  * loads verify a format stamp and the embedded key; anything unreadable
+    or stale is dropped (counted in ``corrupt_drops``) and treated as a
+    miss — the caller rebuilds and overwrites;
+  * artifacts are self-contained pickles (see the serialization hooks on
+    :class:`~repro.core.isa.Inst` and
+    :func:`~repro.core.offload.rehydrate_analysis`).
+
+``AnalysisCache(store=...)`` layers this under the in-memory memo, and
+``DSEEngine(store=...)`` / ``examples/dse_cim.py --cache-dir`` expose it,
+so a second CLI sweep over the same design space performs zero trace
+builds, and ``executor="process"`` workers share one global analysis per
+key through the store instead of rebuilding per worker.
+"""
+from __future__ import annotations
+
+import hashlib
+import inspect
+import json
+import os
+import pathlib
+import pickle
+import tempfile
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+from repro.core.cache import CacheConfig
+from repro.core.idg import FlowIndex
+from repro.core.offload import ANALYSIS_VERSION, OffloadConfig, OffloadResult
+from repro.core.reshape import ReshapedTrace
+from repro.core.trace import TRACE_VM_VERSION, TraceResult
+
+# Bump when the on-disk envelope ({format, key, payload} pickle) changes.
+STORE_FORMAT = 1
+
+_FINGERPRINTS: Dict[str, str] = {}
+
+
+def workload_fingerprint(workload: str) -> str:
+    """Content hash of a workload: its name + the builder module's source.
+
+    Editing any code in the module that defines the workload's builder
+    invalidates every persisted analysis of it.  Unknown workloads (or
+    unreadable source, e.g. frozen deployments) degrade to a name-only
+    fingerprint — still correct across runs of one build, just less
+    sensitive to code changes."""
+    cached = _FINGERPRINTS.get(workload)
+    if cached is not None:
+        return cached
+    src = ""
+    try:
+        from repro.workloads import WORKLOADS   # late: keep the store importable
+        builder = WORKLOADS.get(workload)
+        if builder is not None:
+            src = inspect.getsource(inspect.getmodule(builder))
+    except (OSError, TypeError, ImportError):
+        src = ""
+    digest = hashlib.sha256(f"{workload}\n{src}".encode()).hexdigest()[:16]
+    _FINGERPRINTS[workload] = digest
+    return digest
+
+
+def _cache_geometry(levels: Sequence[CacheConfig]) -> list:
+    """Full per-level geometry — two configs with equal sizes but different
+    associativity/banking must never share an artifact."""
+    return [[c.name, c.size, c.assoc, c.banks, c.mshrs] for c in levels]
+
+
+def _offload_spec(cfg: OffloadConfig) -> dict:
+    return {
+        "cim_set": sorted(cfg.cim_set),
+        "cim_levels": list(cfg.cim_levels),
+        "require_same_bank": cfg.require_same_bank,
+        "allow_cross_level": cfg.allow_cross_level,
+        "min_mem_operands": cfg.min_mem_operands,
+        "min_load_leaves": cfg.min_load_leaves,
+        "max_tree_ops": cfg.max_tree_ops,
+    }
+
+
+class AnalysisStore:
+    """Content-addressed on-disk artifact store (one directory tree).
+
+    ``version`` defaults to the running trace VM's version; passing an
+    explicit value exists for tests and for pinning a store to an older VM.
+    Hit/miss/write/corruption counters mirror the in-memory cache's build
+    counters so sweeps can *prove* a warm second run did no analysis work.
+    """
+
+    def __init__(self, root: Union[str, pathlib.Path],
+                 version: int = TRACE_VM_VERSION):
+        self.root = pathlib.Path(root).expanduser()
+        self.version = int(version)
+        for layer in ("layer1", "layer2"):
+            (self.root / layer).mkdir(parents=True, exist_ok=True)
+        # counters are shared by thread-pool sweeps and asserted on exactly
+        # by tests/CI, so increments go through a lock
+        self._stats_lock = threading.Lock()
+        self.l1_hits = 0
+        self.l1_misses = 0
+        self.l2_hits = 0
+        self.l2_misses = 0
+        self.writes = 0
+        self.corrupt_drops = 0
+
+    def _bump(self, counter: str, by: int = 1) -> None:
+        with self._stats_lock:
+            setattr(self, counter, getattr(self, counter) + by)
+
+    # -------------------------------------------------------------- keys
+    def _key(self, spec: dict) -> str:
+        doc = json.dumps(spec, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(doc.encode()).hexdigest()[:32]
+
+    def layer1_key(self, workload: str,
+                   cache_levels: Sequence[CacheConfig]) -> str:
+        return self._key({
+            "layer": 1,
+            "workload": workload,
+            "fingerprint": workload_fingerprint(workload),
+            "cache": _cache_geometry(cache_levels),
+            "trace_vm": self.version,
+        })
+
+    def layer2_key(self, workload: str, cache_levels: Sequence[CacheConfig],
+                   cfg: OffloadConfig) -> str:
+        return self._key({
+            "layer": 2,
+            "workload": workload,
+            "fingerprint": workload_fingerprint(workload),
+            "cache": _cache_geometry(cache_levels),
+            "trace_vm": self.version,
+            "analysis": ANALYSIS_VERSION,   # selection/reshape semantics
+            "offload": _offload_spec(cfg),
+        })
+
+    def _path(self, layer: int, key: str) -> pathlib.Path:
+        return self.root / f"layer{layer}" / f"{key}.pkl"
+
+    # ---------------------------------------------------------------- io
+    def _read(self, path: pathlib.Path, expect_key: str) -> Optional[dict]:
+        """Load + verify one artifact; anything wrong is a recoverable miss."""
+        try:
+            with open(path, "rb") as f:
+                doc = pickle.load(f)
+        except FileNotFoundError:
+            return None
+        except Exception:
+            doc = None
+        if (not isinstance(doc, dict) or doc.get("format") != STORE_FORMAT
+                or doc.get("key") != expect_key
+                or not isinstance(doc.get("payload"), dict)):
+            self._bump("corrupt_drops")
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+        return doc["payload"]
+
+    def _write(self, path: pathlib.Path, key: str, payload: dict) -> None:
+        """Atomic publish: readers see the old artifact or the new one,
+        never bytes in between; racing writers settle on a complete file."""
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name,
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump({"format": STORE_FORMAT, "key": key,
+                             "payload": payload},
+                            f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._bump("writes")
+
+    # ------------------------------------------------------------ layer 1
+    # The trace and its flow tables live in two sibling files under one key:
+    # the (large) trace pickle is written once when first built, and the
+    # flow file appears later when an analysis first needs it — upgrading a
+    # key never re-serializes the trace, and a concurrent trace-only save
+    # can never downgrade an artifact that already has flow tables.
+    def _flow_path(self, key: str) -> pathlib.Path:
+        # the flow tables additionally depend on the IDG/flow construction
+        # semantics, which the trace half of the key does not cover
+        return self.root / "layer1" / f"{key}.flow-v{ANALYSIS_VERSION}.pkl"
+
+    def load_layer1(self, workload: str, cache_levels: Sequence[CacheConfig]
+                    ) -> Optional[Tuple[TraceResult, Optional[FlowIndex]]]:
+        key = self.layer1_key(workload, cache_levels)
+        payload = self._read(self._path(1, key), key)
+        if payload is None:
+            self._bump("l1_misses")
+            return None
+        flow_payload = self._read(self._flow_path(key), key)
+        self._bump("l1_hits")
+        return (payload["trace"],
+                flow_payload["flow"] if flow_payload is not None else None)
+
+    def save_layer1(self, workload: str, cache_levels: Sequence[CacheConfig],
+                    trace_result: TraceResult,
+                    flow: Optional[FlowIndex] = None) -> None:
+        key = self.layer1_key(workload, cache_levels)
+        trace_path = self._path(1, key)
+        if not trace_path.exists():     # traces are deterministic per key:
+            self._write(trace_path, key, {"trace": trace_result})
+        if flow is not None:
+            self._write(self._flow_path(key), key, {"flow": flow})
+
+    # ------------------------------------------------------------ layer 2
+    def load_layer2(self, workload: str, cache_levels: Sequence[CacheConfig],
+                    cfg: OffloadConfig
+                    ) -> Optional[Tuple[OffloadResult, ReshapedTrace]]:
+        key = self.layer2_key(workload, cache_levels, cfg)
+        payload = self._read(self._path(2, key), key)
+        if payload is None:
+            self._bump("l2_misses")
+            return None
+        self._bump("l2_hits")
+        return payload["offload"], payload["reshaped"]
+
+    def save_layer2(self, workload: str, cache_levels: Sequence[CacheConfig],
+                    cfg: OffloadConfig, offload: OffloadResult,
+                    reshaped: ReshapedTrace) -> None:
+        key = self.layer2_key(workload, cache_levels, cfg)
+        self._write(self._path(2, key), key,
+                    {"offload": offload, "reshaped": reshaped})
+
+    # -------------------------------------------------------------- misc
+    def stats(self) -> Dict[str, int]:
+        return {"store_l1_hits": self.l1_hits,
+                "store_l1_misses": self.l1_misses,
+                "store_l2_hits": self.l2_hits,
+                "store_l2_misses": self.l2_misses,
+                "store_writes": self.writes,
+                "store_corrupt_drops": self.corrupt_drops}
+
+    def __repr__(self) -> str:
+        return (f"AnalysisStore({str(self.root)!r}, version={self.version}, "
+                f"l1={self.l1_hits}h/{self.l1_misses}m, "
+                f"l2={self.l2_hits}h/{self.l2_misses}m)")

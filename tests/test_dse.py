@@ -1,12 +1,15 @@
 """repro.dse: sweep-spec enumeration, analysis-cache memoization, Pareto
-extraction, and an end-to-end mini-sweep against the unmemoized pipeline."""
+extraction, the host-model axis, process-pool store sharing, and an
+end-to-end mini-sweep against the unmemoized pipeline."""
 import dataclasses
 import itertools
 
 import pytest
 
 from repro.core import OffloadConfig, profile_system, trace_program
-from repro.dse import (CacheOption, DSEEngine, SweepSpace, pareto_front)
+from repro.core.host_model import HOST_PRESETS
+from repro.dse import (CacheOption, DSEEngine, HostOption, SweepSpace,
+                       pareto_front)
 from repro.dse.space import CACHE_PRESETS, LEVEL_PRESETS
 from repro.workloads import build
 
@@ -66,6 +69,71 @@ def test_point_offload_config():
     cfg = p.offload_config()
     assert cfg.cim_levels == ("L2",)
     assert cfg.cim_set == frozenset({"and", "or", "xor"})
+
+
+# -------------------------------------------------------------- host axis
+def test_host_axis_enumeration():
+    space = SweepSpace(workloads=("KM",), techs=("sram", "fefet"),
+                       hosts=("A9-1GHz", "inorder-1GHz"))
+    pts = space.points()
+    assert len(pts) == len(space) == 4
+    # host iterates innermost (pricing-only: variants stay adjacent)...
+    assert [p.host.name for p in pts[:2]] == ["A9-1GHz", "inorder-1GHz"]
+    assert pts[0].tech == pts[1].tech == "sram"
+    # ...and never perturbs the analysis key
+    assert len({p.analysis_key for p in pts}) == 1
+    assert pts[1].label.endswith("/inorder-1GHz")
+    with pytest.raises(KeyError):
+        SweepSpace(workloads=("KM",), hosts=("pentium-133MHz",))
+    assert HostOption.of(HOST_PRESETS["A9-2GHz"]).name == "A9-2GHz"
+
+
+def test_custom_host_model_never_shadows_preset():
+    """A hand-built HostModel carrying a preset's default name must get a
+    distinct label, so its records can't be conflated with the preset's."""
+    from repro.core.host_model import HostModel
+    custom = HostModel(pipeline_pj=999.0)        # name defaults to A9-1GHz
+    opt = HostOption.of(custom)
+    assert opt.name == "custom(A9-1GHz)"
+    pts = SweepSpace(workloads=("KM",), hosts=(custom, "A9-1GHz")).points()
+    assert pts[0].host.name != pts[1].host.name
+    # the engine-default path gets the same guard
+    (rec,) = DSEEngine(host=custom).run(SweepSpace(workloads=("NB",))).records
+    assert rec.host == "custom(A9-1GHz)"
+
+
+def test_host_axis_prices_distinct_records():
+    """3+ presets over one workload: zero extra analysis work, but every
+    host yields its own energy/speedup numbers all the way into the
+    Pareto/markdown reports."""
+    hosts = ("A9-1GHz", "inorder-1GHz", "big-OoO-2GHz")
+    eng = DSEEngine()
+    results = eng.run(SweepSpace(workloads=("NB",), hosts=hosts))
+    assert len(results) == 3
+    assert results.stats["trace_builds"] == 1      # host is pricing-only
+    assert results.stats["offload_builds"] == 1
+    assert [r.host for r in results] == list(hosts)
+    priced = {(r.energy_improvement, r.speedup) for r in results}
+    assert len(priced) == 3                        # genuinely distinct
+    md = results.to_markdown()
+    for h in hosts:
+        assert h in md                             # table + Pareto labels
+    front = results.pareto(("energy_improvement", "speedup"))
+    assert front and all(r.host in hosts for r in front)
+
+
+def test_default_host_matches_engine_host():
+    """hosts=(None,) (the default) prices with the engine's host and
+    labels records with its name — four-axis sweeps are unchanged."""
+    (rec,) = DSEEngine().run(SweepSpace(workloads=("NB",))).records
+    assert rec.host == "A9-1GHz"
+    rep = profile_system(trace_program(*_nb()), OffloadConfig())
+    assert rec.energy_improvement == pytest.approx(rep.energy_improvement)
+
+
+def _nb():
+    fn, args = build("NB")
+    return (fn,) + tuple(args)
 
 
 # ------------------------------------------------------------ memoization
@@ -176,3 +244,29 @@ def test_mini_sweep_2x2x2_end_to_end():
     assert "Pareto frontier" in md and "| NB |" in md
     doc = results.to_json()
     assert '"records"' in doc and '"energy_improvement"' in doc
+
+
+# ------------------------------------------------- process-pool store path
+def test_process_executor_one_global_build_per_key(tmp_path):
+    """Spawned workers route through the shared AnalysisStore: every
+    analysis key is built exactly once globally (not once per worker), and
+    a second engine over the same store builds nothing at all."""
+    space = SweepSpace(workloads=("NB",), caches=("32K+256K", "64K+256K"),
+                       cim_levels=("L1_only", "both"))
+    eng = DSEEngine(executor="process", max_workers=2, store=tmp_path)
+    r1 = eng.run(space)
+    assert len(r1) == 4
+    assert r1.stats["trace_builds"] == 2           # == distinct analysis keys
+    assert r1.stats["offload_builds"] == 4         # 2 caches x 2 level sets
+
+    r2 = DSEEngine(executor="process", max_workers=2, store=tmp_path).run(space)
+    assert r2.stats["trace_builds"] == 0           # all workers hit the store
+    assert r2.stats["offload_builds"] == 0
+    assert r2.stats["store_l1_hits"] >= 2
+    assert [r.energy_improvement for r in r2] == \
+        [r.energy_improvement for r in r1]
+
+    # matches the shared-cache thread path bit-for-bit
+    r3 = DSEEngine(executor="thread").run(space)
+    assert [r.energy_improvement for r in r3] == \
+        [r.energy_improvement for r in r1]

@@ -1,0 +1,164 @@
+"""repro.dse.store: persisted-vs-fresh artifact equality, versioned
+invalidation, corrupted-file recovery, and cross-engine zero-rebuild runs."""
+import pickle
+
+import pytest
+
+from repro.core import profile_system
+from repro.core.offload import OffloadConfig
+from repro.dse import AnalysisCache, AnalysisStore, DSEEngine, SweepSpace
+from repro.dse.space import CacheOption
+from repro.dse.store import STORE_FORMAT, workload_fingerprint
+
+CACHE = CacheOption.of("32K+256K")
+CFG = OffloadConfig()
+
+
+# ----------------------------------------------------------------- keys
+def test_keys_are_content_addressed(tmp_path):
+    store = AnalysisStore(tmp_path)
+    k1 = store.layer1_key("NB", CACHE.levels)
+    assert k1 == store.layer1_key("NB", CACHE.levels)        # deterministic
+    assert k1 != store.layer1_key("KM", CACHE.levels)        # workload
+    other = CacheOption.of("64K+256K")
+    assert k1 != store.layer1_key("NB", other.levels)        # geometry
+    k2 = store.layer2_key("NB", CACHE.levels, CFG)
+    assert k2 != k1
+    assert k2 != store.layer2_key("NB", CACHE.levels,
+                                  OffloadConfig(cim_levels=("L1",)))
+    # fingerprints hash the builder module's source, not just the name
+    assert workload_fingerprint("NB") != workload_fingerprint("LCS")
+
+
+# ------------------------------------------------------------ round-trip
+def test_roundtrip_persisted_equals_fresh(tmp_path):
+    """A second process (fresh cache, same store) must price identically —
+    and without building anything."""
+    c1 = AnalysisCache(store=AnalysisStore(tmp_path))
+    tr1 = c1.trace("NB", CACHE)
+    res1, rs1 = c1.offload("NB", CACHE, CFG)
+    assert c1.trace_builds == 1 and c1.offload_builds == 1
+
+    c2 = AnalysisCache(store=AnalysisStore(tmp_path))      # "new process"
+    tr2 = c2.trace("NB", CACHE)
+    res2, rs2 = c2.offload("NB", CACHE, CFG)
+    assert c2.trace_builds == 0 and c2.offload_builds == 0
+    assert c2.store.l1_hits >= 1 and c2.store.l2_hits == 1
+
+    # instruction stream survives byte-for-byte (repr covers every field)
+    assert len(tr2.trace) == len(tr1.trace)
+    assert repr(tr2.trace[0]) == repr(tr1.trace[0])
+    assert repr(tr2.trace[-1]) == repr(tr1.trace[-1])
+    assert [c.level for c in res2.candidates] == \
+        [c.level for c in res1.candidates]
+    assert rs2.host_seqs == rs1.host_seqs
+
+    rep1 = profile_system(tr1, offload=res1, reshaped=rs1)
+    rep2 = profile_system(tr2, offload=res2, reshaped=rs2)
+    assert rep2.energy_improvement == rep1.energy_improvement
+    assert rep2.speedup == rep1.speedup
+    assert rep2.macr == rep1.macr
+
+
+def test_layer1_upgraded_with_flow_tables(tmp_path):
+    """trace() persists the raw trace; trace_analysis() upgrades the same
+    artifact with the flow index so later processes skip analyze_trace."""
+    store = AnalysisStore(tmp_path)
+    c1 = AnalysisCache(store=store)
+    c1.trace("NB", CACHE)
+    _, flow = store.load_layer1("NB", CACHE.levels)
+    assert flow is None
+    c1.trace_analysis("NB", CACHE)
+    _, flow = store.load_layer1("NB", CACHE.levels)
+    assert flow is not None
+
+    c2 = AnalysisCache(store=AnalysisStore(tmp_path))
+    an = c2.trace_analysis("NB", CACHE)
+    assert c2.trace_builds == 0
+    assert an.flow.reg_consumers                    # rehydrated, non-empty
+
+
+# ------------------------------------------------------------ invalidation
+def test_analysis_version_in_selection_keys(tmp_path, monkeypatch):
+    """Selection/flow artifacts are additionally keyed by ANALYSIS_VERSION:
+    an algorithm change invalidates them while the trace stays reusable."""
+    store = AnalysisStore(tmp_path)
+    c = AnalysisCache(store=store)
+    c.offload("NB", CACHE, CFG)
+
+    import repro.dse.store as store_mod
+    monkeypatch.setattr(store_mod, "ANALYSIS_VERSION",
+                        store_mod.ANALYSIS_VERSION + 1)
+    bumped = AnalysisStore(tmp_path)
+    assert bumped.load_layer2("NB", CACHE.levels, CFG) is None
+    tr, flow = bumped.load_layer1("NB", CACHE.levels)
+    assert tr is not None and flow is None      # trace reusable, flow not
+
+
+def test_version_bump_invalidates(tmp_path):
+    c1 = AnalysisCache(store=AnalysisStore(tmp_path, version=1))
+    c1.trace("NB", CACHE)
+
+    bumped = AnalysisStore(tmp_path, version=2)
+    assert bumped.load_layer1("NB", CACHE.levels) is None   # unreachable
+    c2 = AnalysisCache(store=bumped)
+    c2.trace("NB", CACHE)
+    assert c2.trace_builds == 1                             # forced rebuild
+
+    # the old version's artifact is untouched (keys don't collide)
+    assert AnalysisStore(tmp_path, version=1).load_layer1(
+        "NB", CACHE.levels) is not None
+
+
+# --------------------------------------------------------------- recovery
+def test_corrupt_file_recovery(tmp_path):
+    store = AnalysisStore(tmp_path)
+    AnalysisCache(store=store).trace("NB", CACHE)
+    files = list((tmp_path / "layer1").glob("*.pkl"))
+    assert len(files) == 1
+    files[0].write_bytes(b"not a pickle")
+
+    fresh = AnalysisStore(tmp_path)
+    assert fresh.load_layer1("NB", CACHE.levels) is None
+    assert fresh.corrupt_drops == 1
+    assert not files[0].exists()                    # dropped, not retried
+
+    c = AnalysisCache(store=fresh)                  # rebuild + re-publish
+    c.trace("NB", CACHE)
+    assert c.trace_builds == 1
+    assert AnalysisStore(tmp_path).load_layer1("NB", CACHE.levels) is not None
+
+
+def test_foreign_payload_rejected(tmp_path):
+    """A well-formed pickle that isn't ours (wrong envelope/key) is a miss."""
+    store = AnalysisStore(tmp_path)
+    key = store.layer1_key("NB", CACHE.levels)
+    path = tmp_path / "layer1" / f"{key}.pkl"
+    path.write_bytes(pickle.dumps({"format": STORE_FORMAT,
+                                   "key": "somebody-else", "payload": {}}))
+    assert store.load_layer1("NB", CACHE.levels) is None
+    assert store.corrupt_drops == 1
+
+
+# ----------------------------------------------------------- two engines
+def test_two_engines_share_store_zero_rebuilds(tmp_path):
+    space = SweepSpace(workloads=("NB",), cim_levels=("L1_only", "both"),
+                       techs=("sram", "fefet"))
+    r1 = DSEEngine(store=tmp_path).run(space)
+    assert r1.stats["trace_builds"] == 1
+    assert r1.stats["offload_builds"] == 2
+    assert r1.stats["store_writes"] >= 3            # 1x layer1(+flow) + 2x layer2
+
+    r2 = DSEEngine(store=tmp_path).run(space)       # fresh engine, warm disk
+    assert r2.stats["trace_builds"] == 0
+    assert r2.stats["offload_builds"] == 0
+    assert r2.stats["store_l1_hits"] >= 1
+    assert r2.stats["store_l2_hits"] == 2
+    assert [r.energy_improvement for r in r2] == \
+        [r.energy_improvement for r in r1]
+    assert [r.speedup for r in r2] == [r.speedup for r in r1]
+
+
+def test_engine_rejects_cache_plus_store(tmp_path):
+    with pytest.raises(ValueError):
+        DSEEngine(cache=AnalysisCache(), store=tmp_path)

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs snippet-runner: execute every fenced ``python`` code block.
+
+Usage::
+
+    python tools/check_docs.py README.md docs/architecture.md
+    python tools/check_docs.py --list README.md
+
+Each ```python block is run in its own subprocess from the repo root with
+``src/`` on PYTHONPATH, so documentation examples are tested exactly as a
+reader would run them.  Blocks in other languages (```bash, ```text, ...)
+are ignored — use those fences for anything not meant to execute.  A block
+failure reports the file and the line the fence opened on, and the runner
+exits non-zero if any block fails.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+from typing import List, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def extract_python_blocks(path: pathlib.Path) -> List[Tuple[int, str]]:
+    """(line-of-opening-fence, source) for every ```python block."""
+    blocks: List[Tuple[int, str]] = []
+    fence_line = 0
+    lang = None
+    buf: List[str] = []
+    in_block = False
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        stripped = line.strip()
+        if stripped.startswith("```"):
+            if not in_block:
+                in_block = True
+                lang = stripped[3:].strip().lower()
+                fence_line = lineno
+                buf = []
+            else:
+                in_block = False
+                if lang == "python":
+                    blocks.append((fence_line, "\n".join(buf)))
+        elif in_block:
+            buf.append(line)
+    return blocks
+
+
+def run_block(source: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    src = str(REPO_ROOT / "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, "-c", source], cwd=REPO_ROOT,
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="markdown files to check")
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate blocks without running them")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    total = 0
+    for name in args.files:
+        path = pathlib.Path(name)
+        if not path.is_absolute():
+            path = REPO_ROOT / path
+        blocks = extract_python_blocks(path)
+        if not blocks:
+            print(f"{name}: no python blocks")
+            continue
+        for fence_line, source in blocks:
+            total += 1
+            if args.list:
+                head = source.strip().splitlines()[0] if source.strip() else ""
+                print(f"{name}:{fence_line}: {head}")
+                continue
+            proc = run_block(source)
+            status = "ok" if proc.returncode == 0 else "FAIL"
+            print(f"{name}:{fence_line}: {status}")
+            if proc.returncode != 0:
+                failures += 1
+                sys.stdout.write(proc.stdout)
+                sys.stderr.write(proc.stderr)
+    if not args.list:
+        print(f"[check_docs] {total - failures}/{total} blocks passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
