@@ -10,9 +10,9 @@ import sys
 import time
 
 from benchmarks import (fig12_macr_validation, fig13_macr, fig14_cache_cfg,
-                        fig15_levels, fig16_tech, fig17_host, roofline,
-                        table3_energy, table5_validation, table6_speedup,
-                        tpu_macr)
+                        fig15_levels, fig16_tech, fig17_host, fig_adaptive,
+                        roofline, table3_energy, table5_validation,
+                        table6_speedup, tpu_macr)
 
 ALL = {
     "table3": table3_energy,
@@ -24,6 +24,7 @@ ALL = {
     "fig15": fig15_levels,
     "fig16": fig16_tech,
     "fig17": fig17_host,
+    "fig_adaptive": fig_adaptive,
     "tpu_macr": tpu_macr,
     "roofline": roofline,
 }

@@ -33,11 +33,18 @@ host-CPU axis (named presets from ``repro.core.host_model.HOST_PRESETS``)::
 
     PYTHONPATH=src python examples/dse_cim.py --workload KM \\
         --cache-dir ~/.cache/eva-cim --hosts A9-1GHz,inorder-1GHz,A9-2GHz
+
+``--adaptive`` swaps the exhaustive cross-product for frontier-driven
+refinement (``repro.dse.AdaptiveDSE``): price a coarse seed, then only the
+axis neighborhoods of non-dominated points, round by round, until the
+frontier is stable — same frontier, a fraction of the points priced::
+
+    PYTHONPATH=src python examples/dse_cim.py --workload KM --adaptive
 """
 import argparse
 import sys
 
-from repro.dse import DSEEngine, HOST_PRESETS, SweepSpace
+from repro.dse import AdaptiveDSE, DSEEngine, HOST_PRESETS, SweepSpace
 from repro.workloads import WORKLOADS
 
 
@@ -56,6 +63,10 @@ def main(argv=None) -> int:
                     help="write the markdown sweep report here")
     ap.add_argument("--json", default=None,
                     help="write structured sweep records here")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="frontier-driven refinement instead of the "
+                         "exhaustive cross-product (same frontier, fewer "
+                         "points priced)")
     args = ap.parse_args(argv)
 
     engine = DSEEngine(executor=args.executor, store=args.cache_dir)
@@ -67,7 +78,13 @@ def main(argv=None) -> int:
                        hosts=hosts)
     print(f"== {args.workload}: {len(space)} design points, "
           f"{space.n_analyses()} trace analyses ==")
-    results = engine.run(space)
+    if args.adaptive:
+        adaptive = AdaptiveDSE(space, engine=engine).run()
+        for line in adaptive.summary().splitlines():
+            print(f"   {line}")
+        results = adaptive.results
+    else:
+        results = engine.run(space)
     st = results.stats
     print(f"   done in {results.elapsed_s:.1f}s "
           f"(trace builds {st.get('trace_builds')}, "
@@ -76,6 +93,22 @@ def main(argv=None) -> int:
         print(f"   store: {st.get('store_l1_hits', 0)} trace hits / "
               f"{st.get('store_l2_hits', 0)} selection hits / "
               f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
+
+    # the fixed Fig. 14/15/16 slices assume the full grid was priced —
+    # an adaptive run skips dominated regions, so go straight to the front
+    if args.adaptive:
+        print("== Pareto frontier (identical to the exhaustive sweep's) ==")
+        for r in adaptive.frontier:
+            print(f"  {r.config_label:34s} E {r.energy_improvement:5.2f}x "
+                  f"spd {r.speedup:5.2f}x  (round {r.round})")
+        if args.report:
+            with open(args.report, "w") as f:
+                f.write(adaptive.to_markdown())
+            print(f"[report] {args.report}")
+        if args.json:
+            results.to_json(args.json)
+            print(f"[json] {args.json}")
+        return 0
 
     # the Fig. 14/15/16 slices fix the host axis at its first value
     host0 = results.records[0].host

@@ -21,11 +21,39 @@ static energy, which shifts both the speedup and the static-energy term.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Mapping
 
 from repro.core.isa import (U_BRANCH, U_FP_ALU, U_FP_DIV, U_FP_MUL,
                             U_FP_SPECIAL, U_INT_ALU, U_INT_DIV, U_INT_MUL,
                             U_MEM_RD, U_MEM_WR, U_SIMD, Inst)
+
+
+class FrozenUnitMap(dict):
+    """Immutable, hashable unit->pJ mapping.
+
+    :class:`HostModel` is a frozen dataclass, but a plain ``dict`` field
+    defeats its generated ``__hash__`` — and sweep-point dedup (adaptive
+    refinement, set membership of :class:`~repro.dse.space.SweepPoint`)
+    needs host-carrying points to hash.  This keeps the full read-side dict
+    API (``.get``, iteration, ``==`` against plain dicts, and therefore the
+    ``HOST_PRESETS`` equality lookup in ``HostOption.of``) while rejecting
+    mutation and hashing by value.
+    """
+
+    def _frozen(self, *args, **kwargs):
+        raise TypeError("HostModel.unit_pj is immutable; build a new "
+                        "HostModel to change unit energies")
+
+    __setitem__ = __delitem__ = __ior__ = _frozen
+    clear = pop = popitem = setdefault = update = _frozen
+
+    def __hash__(self):
+        return hash(frozenset(self.items()))
+
+    def __reduce__(self):
+        # default dict-subclass pickling repopulates via the (blocked)
+        # __setitem__; rebuild through the C-level dict constructor instead
+        return (self.__class__, (dict(self),))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,12 +65,14 @@ class HostModel:
     # (~30% of A9 package power at 45 nm) — McPAT's P_static * T term, which
     # couples runtime reduction into the energy improvement
     static_pj_per_cycle: float = 150.0
-    unit_pj: Dict[str, float] = dataclasses.field(default_factory=lambda: {
-        U_INT_ALU: 15.0, U_INT_MUL: 40.0, U_INT_DIV: 90.0,
-        U_FP_ALU: 40.0, U_FP_MUL: 60.0, U_FP_DIV: 140.0, U_FP_SPECIAL: 160.0,
-        U_MEM_RD: 20.0, U_MEM_WR: 20.0,        # LSQ/AGU (cache array priced
-        U_BRANCH: 12.0, U_SIMD: 30.0,          #  separately via Table III)
-    })
+    unit_pj: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: FrozenUnitMap({
+            U_INT_ALU: 15.0, U_INT_MUL: 40.0, U_INT_DIV: 90.0,
+            U_FP_ALU: 40.0, U_FP_MUL: 60.0, U_FP_DIV: 140.0,
+            U_FP_SPECIAL: 160.0,
+            U_MEM_RD: 20.0, U_MEM_WR: 20.0,    # LSQ/AGU (cache array priced
+            U_BRANCH: 12.0, U_SIMD: 30.0,      #  separately via Table III)
+        }))
     # --- timing (cycles @ 1 GHz) -------------------------------------------
     # A9 is dual-issue OoO: sustained ~1.5 instructions/cycle on these
     # kernels => effective CPI ~0.65 for pipelined instructions.
@@ -63,6 +93,12 @@ class HostModel:
     # construction of the pricing constants above stays source-compatible
     name: str = "A9-1GHz"
     freq_ghz: float = 1.0
+
+    def __post_init__(self):
+        # accept plain dicts at construction but store the frozen mapping,
+        # so every HostModel (and anything carrying one) is hashable
+        if not isinstance(self.unit_pj, FrozenUnitMap):
+            object.__setattr__(self, "unit_pj", FrozenUnitMap(self.unit_pj))
 
     def inst_energy_pj(self, inst: Inst) -> float:
         return self.pipeline_pj + self.unit_pj.get(inst.unit, 15.0)

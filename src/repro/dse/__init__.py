@@ -15,7 +15,10 @@ early examples into a subsystem:
     extending the analysis cache across processes and CLI invocations,
   * :mod:`repro.dse.results` — structured records, JSON/markdown reports,
   * :mod:`repro.dse.pareto`  — Pareto-frontier extraction over arbitrary
-    objective sets.
+    objective sets (non-finite objective values never reach a frontier),
+  * :mod:`repro.dse.adaptive` — frontier-driven iterative refinement:
+    price a coarse seed, then re-enumerate only the axis neighborhoods of
+    non-dominated points instead of the full cross-product.
 
 Quickstart::
 
@@ -31,17 +34,22 @@ Quickstart::
     print(results.to_markdown())
 """
 from repro.core.host_model import HOST_PRESETS
+from repro.dse.adaptive import (AdaptiveDSE, AdaptiveResult, RoundInfo,
+                                coarse_seed)
 from repro.dse.engine import AnalysisCache, DSEEngine
-from repro.dse.pareto import dominates, objective_vector, pareto_front
+from repro.dse.pareto import (dominates, frontier_stable, objective_vector,
+                              pareto_front)
 from repro.dse.results import SweepRecord, SweepResults
 from repro.dse.space import (CACHE_PRESETS, CIM_SETS, LEVEL_PRESETS,
-                             CacheOption, HostOption, SweepPoint, SweepSpace)
+                             CacheOption, HostOption, SweepPoint, SweepSpace,
+                             neighborhood)
 from repro.dse.store import AnalysisStore, workload_fingerprint
 
 __all__ = [
-    "AnalysisCache", "AnalysisStore", "DSEEngine", "dominates",
-    "objective_vector", "pareto_front", "SweepRecord", "SweepResults",
-    "CACHE_PRESETS", "CIM_SETS", "HOST_PRESETS", "LEVEL_PRESETS",
-    "CacheOption", "HostOption", "SweepPoint", "SweepSpace",
+    "AdaptiveDSE", "AdaptiveResult", "AnalysisCache", "AnalysisStore",
+    "DSEEngine", "RoundInfo", "coarse_seed", "dominates", "frontier_stable",
+    "neighborhood", "objective_vector", "pareto_front", "SweepRecord",
+    "SweepResults", "CACHE_PRESETS", "CIM_SETS", "HOST_PRESETS",
+    "LEVEL_PRESETS", "CacheOption", "HostOption", "SweepPoint", "SweepSpace",
     "workload_fingerprint",
 ]

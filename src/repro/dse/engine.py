@@ -26,6 +26,7 @@ in SweepPoint order regardless of executor scheduling.
 """
 from __future__ import annotations
 
+import dataclasses
 import multiprocessing
 import os
 import pathlib
@@ -307,9 +308,21 @@ class DSEEngine:
         return chunks
 
     # -------------------------------------------------------------- run
-    def run(self, space: SweepSpace) -> SweepResults:
+    def run(self, space: Union[SweepSpace, Sequence[SweepPoint]]
+            ) -> SweepResults:
+        """Price a full :class:`~repro.dse.space.SweepSpace` — or any
+        explicit subset of points (adaptive refinement rounds price exactly
+        the new neighborhood, not a cross-product).  A point sequence is
+        re-indexed to its position in the sequence, so record order always
+        matches input order and repeated incremental calls compose; the
+        returned ``stats`` are this call's counter deltas (per-round cost
+        accounting comes for free)."""
         t0 = time.perf_counter()
-        points = space.points()
+        if isinstance(space, SweepSpace):
+            points = space.points()
+        else:
+            points = [dataclasses.replace(p, index=i)
+                      for i, p in enumerate(space)]
         records: List[Optional[SweepRecord]] = [None] * len(points)
         stats_before = self.analysis.stats()
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import pathlib
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -57,6 +58,9 @@ class SweepRecord:
     n_mem_accesses: int
     n_candidates: int
     n_cim_ops: int
+    # provenance: which refinement round priced this point (0 = the coarse
+    # seed sweep; one-shot sweeps leave it 0)
+    round: int = 0
 
     @classmethod
     def from_report(cls, point: SweepPoint, rep: SystemReport,
@@ -123,14 +127,43 @@ class SweepResults:
     def __iter__(self):
         return iter(self.records)
 
+    # ------------------------------------------------------------- merging
+    def merge(self, other: "SweepResults") -> "SweepResults":
+        """Combine two result sets into one (multi-round reports).
+
+        Records are concatenated and re-indexed to one contiguous 0..n-1
+        sequence (each record's ``round`` tag keeps its provenance);
+        ``stats`` counters are summed key-wise over the union of keys, so a
+        merged report never under-counts work one side did and the other
+        didn't (``to_markdown``'s ``trace_builds`` line stays the true
+        total, not a ``'?'`` fallback); ``elapsed_s`` adds.  Neither input
+        is mutated.  Used by :class:`repro.dse.adaptive.AdaptiveDSE` to
+        accumulate refinement rounds.
+        """
+        records = [dataclasses.replace(r, index=i) for i, r in
+                   enumerate(list(self.records) + list(other.records))]
+        stats = dict(self.stats)
+        for k, v in other.stats.items():
+            stats[k] = stats.get(k, 0) + v
+        return SweepResults(records=records, stats=stats,
+                            elapsed_s=self.elapsed_s + other.elapsed_s)
+
     # ------------------------------------------------------------- queries
     def best(self, metric: str = "energy_improvement",
              workload: Optional[str] = None) -> SweepRecord:
+        """Argmax record over ``metric`` (ties broken toward the earliest
+        point).  Records with a non-finite metric (NaN, ±inf) are excluded
+        — ``max()`` over NaN is order-dependent garbage — and all-NaN
+        pools raise rather than return a degenerate winner."""
         pool = [r for r in self.records
                 if workload is None or r.workload == workload]
         if not pool:
             raise ValueError(f"no records for workload={workload!r}")
-        return max(pool, key=lambda r: (getattr(r, metric), -r.index))
+        finite = [r for r in pool if math.isfinite(getattr(r, metric))]
+        if not finite:
+            raise ValueError(f"no finite {metric!r} values for "
+                             f"workload={workload!r}")
+        return max(finite, key=lambda r: (getattr(r, metric), -r.index))
 
     def group_by(self, field: str) -> Dict[str, List[SweepRecord]]:
         out: Dict[str, List[SweepRecord]] = {}

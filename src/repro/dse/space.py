@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterator, List, Optional, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cache import (CacheConfig, L1_32K, L1_64K, L2_256K, L2_2M)
 from repro.core.device_model import TECHS
@@ -119,6 +119,21 @@ class SweepPoint:
         return (self.workload, self.cache.levels)
 
     @property
+    def key(self) -> Tuple:
+        """Canonical design identity — everything that affects pricing,
+        *excluding* ``index`` (a point's position differs between the
+        coarse sweep and a refinement round, but it is the same design)
+        and the cache display name (geometry is the identity, two
+        differently-labeled options with equal geometry price alike).
+        This is the dedup key of adaptive refinement: a point is priced at
+        most once per :class:`~repro.dse.adaptive.AdaptiveDSE` run however
+        many neighborhoods propose it."""
+        return (self.workload, self.cache.levels, self.cim_levels,
+                self.tech, self.cim_set,
+                None if self.host is None else (self.host.name,
+                                                self.host.model))
+
+    @property
     def label(self) -> str:
         lv = "+".join(self.cim_levels)
         base = (f"{self.workload}/{self.cache.name}/cim@{lv}"
@@ -212,3 +227,68 @@ class SweepSpace:
         """Number of expensive trace/IDG passes the sweep needs (vs
         ``len(self)`` full pipeline runs without memoization)."""
         return len(self.workloads) * len(self.caches)
+
+
+# ---------------------------------------------------------------------------
+# Axis neighborhoods — the refinement move set of adaptive DSE.
+# ---------------------------------------------------------------------------
+def _adjacent(ordered: Sequence, i: int) -> List:
+    out = []
+    if i > 0:
+        out.append(ordered[i - 1])
+    if 0 <= i < len(ordered) - 1:
+        out.append(ordered[i + 1])
+    return out
+
+
+def neighborhood(point: SweepPoint, space: SweepSpace) -> List[SweepPoint]:
+    """Single-axis neighbors of ``point`` within ``space``'s axis values.
+
+    The move set deliberately mirrors how the axes order physically:
+
+      * **cache** — the geometries adjacent to the point's in the space's
+        ``caches`` ordering (declare them small→large and "adjacent" means
+        the next size step, Fig. 14's axis);
+      * **cim_levels** — every level set in the space that *strictly
+        contains* the point's (supersets only: adding CiM arrays to more
+        levels explores monotone extensions of a good placement);
+      * **tech / cim_set / host** — the values adjacent in the space's
+        declared ordering.
+
+    Each move changes exactly one axis, so a refinement round prices a
+    cross-shaped neighborhood around every frontier point rather than a
+    new sub-cross-product.  Points are emitted with ``index=-1`` (the
+    driver/engine re-indexes); values outside the space never appear, so
+    refinement stays inside the declared design universe.  A point whose
+    axis value is not in the space at all contributes no move on that
+    axis.
+    """
+    moves: List[SweepPoint] = []
+
+    def emit(**replacement) -> None:
+        moves.append(dataclasses.replace(point, index=-1, **replacement))
+
+    caches: Sequence[CacheOption] = space.caches
+    ci = next((i for i, c in enumerate(caches)
+               if c.levels == point.cache.levels), -1)
+    for c in _adjacent(caches, ci):
+        emit(cache=c)
+
+    current = set(point.cim_levels)
+    for lv in space._level_tuples():
+        if current < set(lv):
+            emit(cim_levels=lv)
+
+    for t in _adjacent(space.techs, list(space.techs).index(point.tech)
+                       if point.tech in space.techs else -1):
+        emit(tech=t)
+    for s in _adjacent(space.cim_sets,
+                       list(space.cim_sets).index(point.cim_set)
+                       if point.cim_set in space.cim_sets else -1):
+        emit(cim_set=s)
+
+    hosts: Sequence[Optional[HostOption]] = space.hosts
+    hi = next((i for i, h in enumerate(hosts) if h == point.host), -1)
+    for h in _adjacent(hosts, hi):
+        emit(host=h)
+    return moves

@@ -1,0 +1,224 @@
+"""repro.dse.adaptive: frontier-driven refinement — neighborhood move set,
+coarse seeding, cross-round dedup, stability termination, warm-store round
+costs, multi-round merge accounting, and frontier parity with the
+exhaustive cross-product."""
+import dataclasses
+
+import pytest
+
+from repro.dse import (AdaptiveDSE, DSEEngine, SweepResults, SweepSpace,
+                       coarse_seed, frontier_stable, neighborhood)
+from repro.dse.results import SweepRecord
+
+
+def _record(i, workload="NB", energy=1.0, speedup=1.0, rnd=0):
+    return SweepRecord(
+        index=i, workload=workload, cache="32K+256K", cim_levels="L1+L2",
+        tech="sram", cim_set="stt", host="A9-1GHz",
+        energy_improvement=energy, speedup=speedup, macr=0.1, macr_l1=0.1,
+        base_energy_pj=1.0, cim_energy_pj=1.0, base_cycles=1.0,
+        cim_cycles=1.0, base_runtime_ms=1.0, cim_runtime_ms=1.0,
+        processor_ratio=0.5, cache_ratio=0.5, n_instructions=1,
+        n_mem_accesses=1, n_candidates=1, n_cim_ops=1, round=rnd)
+
+
+class _CountingEngine(DSEEngine):
+    """DSEEngine that records every design identity it is asked to price."""
+
+    def __init__(self, **kwargs):
+        super().__init__(**kwargs)
+        self.priced_keys = []
+
+    def run(self, space):
+        points = space.points() if isinstance(space, SweepSpace) else space
+        self.priced_keys.extend(p.key for p in points)
+        return super().run(space)
+
+
+# -------------------------------------------------------------- move set
+def test_neighborhood_single_axis_moves():
+    space = SweepSpace(workloads=("KM",),
+                       caches=("32K+256K", "64K+256K", "64K+2M"),
+                       cim_levels=("L1_only", "L2_only", "both"),
+                       techs=("sram", "fefet"),
+                       hosts=("A9-1GHz", "inorder-1GHz"))
+    start = next(p for p in space.points()
+                 if p.cache.name == "64K+256K" and p.cim_levels == ("L1",)
+                 and p.tech == "sram" and p.host.name == "A9-1GHz")
+    moves = neighborhood(start, space)
+    # every move changes exactly one axis
+    for m in moves:
+        diffs = sum((m.cache.levels != start.cache.levels,
+                     m.cim_levels != start.cim_levels,
+                     m.tech != start.tech, m.cim_set != start.cim_set,
+                     m.host != start.host))
+        assert diffs == 1
+    caches = {m.cache.name for m in moves if m.cache != start.cache}
+    assert caches == {"32K+256K", "64K+2M"}          # adjacent geometries
+    levels = {m.cim_levels for m in moves if m.cim_levels != start.cim_levels}
+    assert levels == {("L1", "L2")}                  # strict supersets only
+    assert {m.tech for m in moves if m.tech != start.tech} == {"fefet"}
+    assert {m.host.name for m in moves
+            if m.host != start.host} == {"inorder-1GHz"}
+    # edges clamp: first cache has one cache-neighbor, 'both' no superset
+    edge = next(p for p in space.points()
+                if p.cache.name == "32K+256K" and p.cim_levels == ("L1", "L2"))
+    edge_moves = neighborhood(edge, space)
+    assert {m.cache.name for m in edge_moves
+            if m.cache != edge.cache} == {"64K+256K"}
+    assert all(m.cim_levels == edge.cim_levels or set(edge.cim_levels)
+               < set(m.cim_levels) for m in edge_moves)
+
+
+def test_coarse_seed_covers_every_workload_from_the_bottom():
+    space = SweepSpace(workloads=("KM", "NB"),
+                       caches=("32K+256K", "64K+2M"),
+                       cim_levels=("L1_only", "L2_only", "both"),
+                       techs=("sram", "fefet"),
+                       hosts=("A9-1GHz", "inorder-1GHz"))
+    seed = coarse_seed(space)
+    assert {p.workload for p in seed} == {"KM", "NB"}
+    # minimal level sets only — supersets are reachable, 'both' is not a seed
+    assert {p.cim_levels for p in seed} == {("L1",), ("L2",)}
+    # first value of every other axis
+    assert {p.cache.name for p in seed} == {"32K+256K"}
+    assert {p.tech for p in seed} == {"sram"}
+    assert {p.host.name for p in seed} == {"A9-1GHz"}
+    assert len(seed) == 4
+
+
+def test_frontier_stable_predicate():
+    a = [_record(0, energy=2.0, speedup=1.0), _record(1, energy=1.0,
+                                                      speedup=2.0)]
+    b = [_record(5, energy=2.0, speedup=1.0), _record(9, energy=1.0,
+                                                      speedup=2.0)]
+    obj = ("energy_improvement", "speedup")
+    assert frontier_stable(a, b, obj)                 # same values, any index
+    assert not frontier_stable(None, a, obj)          # no earlier round
+    assert not frontier_stable(a, a[:1], obj)
+    # a key function distinguishes identically-priced distinct designs
+    assert not frontier_stable(a, b, obj, key=lambda r: r.index)
+
+
+# ------------------------------------------------------- merge accounting
+def test_merge_sums_counters_and_reindexes():
+    r1 = SweepResults(records=[_record(0), _record(1)],
+                      stats={"trace_builds": 2, "offload_builds": 3},
+                      elapsed_s=1.0)
+    r2 = SweepResults(records=[_record(0, rnd=1)],
+                      stats={"trace_builds": 1, "store_l1_hits": 4},
+                      elapsed_s=0.5)
+    merged = r1.merge(r2)
+    assert [r.index for r in merged] == [0, 1, 2]     # contiguous reindex
+    assert [r.round for r in merged] == [0, 0, 1]     # provenance survives
+    # counters sum over the UNION of keys — nothing silently dropped
+    assert merged.stats == {"trace_builds": 3, "offload_builds": 3,
+                            "store_l1_hits": 4}
+    assert merged.elapsed_s == pytest.approx(1.5)
+    # inputs untouched
+    assert len(r1) == 2 and r1.stats["trace_builds"] == 2
+    # the markdown report gets a real number, never the '?' fallback
+    assert "3 trace analyses" in merged.to_markdown()
+    assert "?" not in merged.to_markdown().splitlines()[2]
+
+
+# ------------------------------------------------------------ the driver
+_SPACE = SweepSpace(workloads=("NB",),
+                    caches=("32K+256K", "64K+256K"),
+                    cim_levels=("L1_only", "L2_only", "both"),
+                    techs=("sram", "fefet"))
+
+
+def test_adaptive_never_prices_a_point_twice():
+    eng = _CountingEngine()
+    result = AdaptiveDSE(_SPACE, engine=eng).run()
+    assert len(eng.priced_keys) == len(set(eng.priced_keys))
+    assert len(eng.priced_keys) == result.n_priced == len(result.results)
+    # record identities are unique too (merge kept every round distinct)
+    ids = [(r.workload, r.cache, r.cim_levels, r.tech, r.cim_set, r.host)
+           for r in result.results]
+    assert len(ids) == len(set(ids))
+    # provenance: round tags are monotone over the merged record order
+    rounds = [r.round for r in result.results]
+    assert rounds == sorted(rounds) and rounds[0] == 0
+
+
+def test_adaptive_matches_exhaustive_frontier_with_fewer_points():
+    def ident(r):
+        return (r.workload, r.cache, r.cim_levels, r.tech, r.cim_set, r.host)
+    exhaustive = DSEEngine().run(_SPACE)
+    ex_front = {ident(r) for r in
+                exhaustive.pareto(("energy_improvement", "speedup"))}
+    result = AdaptiveDSE(_SPACE, engine=DSEEngine()).run()
+    assert {ident(r) for r in result.frontier} == ex_front
+    assert result.n_priced < len(_SPACE)
+    assert result.space_size == len(_SPACE)
+    assert result.savings > 1.0
+    md = result.to_markdown()
+    assert "round" in md and "Pareto frontier" in md
+
+
+def test_adaptive_terminates_on_stable_frontier():
+    space = SweepSpace(workloads=("NB",),
+                       caches=("32K+256K", "64K+256K", "64K+2M"),
+                       cim_levels=("L1_only", "L2_only", "both"),
+                       techs=("sram", "fefet"))
+    result = AdaptiveDSE(space, engine=DSEEngine(), max_rounds=20).run()
+    # stopped well short of both the round budget and the full grid ...
+    assert len(result.rounds) < 20
+    last = result.rounds[-1]
+    # ... either because a round moved nothing (stable) or proposed nothing
+    assert last.stable or result.n_priced == len(space)
+    assert result.n_priced < len(space)
+    # rounds after the first reuse the already-built analyses of their
+    # neighborhoods where geometry repeats: per-round stats prove the math
+    total_builds = sum(r.stats.get("trace_builds", 0) for r in result.rounds)
+    priced_keys = {(rec.workload, rec.cache) for rec in result.results}
+    assert total_builds == len(priced_keys)
+    # max_rounds=0 prices exactly the seed and stops
+    seed_only = AdaptiveDSE(space, engine=DSEEngine(), max_rounds=0).run()
+    assert len(seed_only.rounds) == 1
+    assert seed_only.n_priced == len(coarse_seed(space))
+
+
+def test_adaptive_rounds_are_free_on_warm_store(tmp_path):
+    """An exhaustive sweep warms the persistent store; every adaptive round
+    after that — including round 0 — does zero analysis work."""
+    DSEEngine(store=tmp_path).run(_SPACE)             # warm the artifacts
+    result = AdaptiveDSE(_SPACE, engine=DSEEngine(store=tmp_path)).run()
+    for info in result.rounds:
+        assert info.stats.get("trace_builds", 0) == 0
+        assert info.stats.get("offload_builds", 0) == 0
+    assert result.rounds[0].stats.get("store_l1_hits", 0) >= 1
+    # and without pre-warming, only round 0 pays for the seed's analyses:
+    # later rounds only build when refinement steps onto a NEW geometry
+    cold = AdaptiveDSE(_SPACE, engine=DSEEngine()).run()
+    assert cold.rounds[0].stats["trace_builds"] >= 1
+    for info in cold.rounds[1:]:
+        seen_before = {(rec.workload, rec.cache)
+                       for rec in cold.results
+                       if rec.round < info.round}
+        new_geoms = {(rec.workload, rec.cache)
+                     for rec in cold.results
+                     if rec.round == info.round} - seen_before
+        assert info.stats["trace_builds"] == len(new_geoms)
+
+
+def test_adaptive_respects_explicit_seed_and_universe():
+    seed = SweepSpace(workloads=("NB",), caches=("32K+256K",),
+                      cim_levels=("both",))
+    result = AdaptiveDSE(_SPACE, engine=DSEEngine()).run(seed)
+    assert result.results.records[0].cim_levels == "L1+L2"
+    # every priced point stays inside the declared universe
+    universe = {p.key for p in _SPACE.points()}
+    labels = {(r.workload, r.cache, r.cim_levels, r.tech) for r in
+              result.results}
+    allowed = {(p.workload, p.cache.name, "+".join(p.cim_levels), p.tech)
+               for p in _SPACE.points()}
+    assert labels <= allowed
+    assert len(universe) == len(_SPACE)
+    # any out-of-universe seed point fails loudly — a partially valid seed
+    # must not silently shrink coverage (workload moves don't exist)
+    outside = SweepSpace(workloads=("KM", "NB"))  # KM not in _SPACE
+    with pytest.raises(ValueError, match="outside the design space"):
+        AdaptiveDSE(_SPACE, engine=DSEEngine()).run(outside)

@@ -12,6 +12,10 @@ from repro.models import inputs as minputs
 from repro.models.transformer import init_params
 from repro.train import steps
 
+# every test here jit-compiles full (reduced) model architectures — tens of
+# seconds of XLA work per arch; the fast CI job skips the module
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(ARCHS)
 
 

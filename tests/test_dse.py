@@ -175,6 +175,40 @@ def test_engine_matches_unmemoized_pipeline():
         assert rec.macr == pytest.approx(rep.macr)
 
 
+# ------------------------------------------------------- hashability (bugfix)
+def test_host_carrying_sweep_point_is_hashable():
+    """Regression: hash(SweepPoint) raised TypeError whenever the point
+    carried a HostOption — the HostModel.unit_pj dict defeated the frozen
+    dataclass's generated __hash__ — which made set/dict dedup of priced
+    points (the adaptive driver's backbone) impossible."""
+    pts = SweepSpace(workloads=("KM",),
+                     hosts=("A9-1GHz", "inorder-1GHz")).points()
+    assert len({hash(p) for p in pts}) == 2          # no TypeError, distinct
+    assert hash(HostOption.of("A9-2GHz")) == hash(HostOption.of("A9-2GHz"))
+    # equal models hash equal however they were built
+    from repro.core.host_model import HostModel
+    assert hash(HostModel()) == hash(HOST_PRESETS["A9-1GHz"])
+    # identity ignores index; set dedup across rounds relies on .key
+    p2 = dataclasses.replace(pts[0], index=99)
+    assert p2.key == pts[0].key and len({pts[0].key, p2.key}) == 1
+
+
+def test_host_model_unit_pj_frozen_but_dict_compatible():
+    import pickle
+    from repro.core.host_model import HostModel
+    m = HostModel(unit_pj={"IntAlu": 1.0})           # plain dict accepted
+    assert m.unit_pj == {"IntAlu": 1.0}              # dict equality intact
+    assert m.unit_pj.get("IntAlu") == 1.0
+    with pytest.raises(TypeError):
+        m.unit_pj["IntAlu"] = 2.0
+    # pickling across the process pool must survive the frozen mapping
+    clone = pickle.loads(pickle.dumps(m))
+    assert clone == m and hash(clone) == hash(m)
+    # HOST_PRESETS equality lookup in HostOption.of stays intact
+    assert HostOption.of(pickle.loads(pickle.dumps(
+        HOST_PRESETS["inorder-1GHz"]))).name == "inorder-1GHz"
+
+
 # ----------------------------------------------------------------- pareto
 @dataclasses.dataclass
 class _Pt:
@@ -209,6 +243,49 @@ def test_pareto_single_objective_is_argmax():
     pts = [_Pt("a", 1.0, 9.0), _Pt("b", 3.0, 0.1), _Pt("c", 2.0, 5.0)]
     front = pareto_front(pts, ("energy_improvement",))
     assert [p.name for p in front] == ["b"]
+
+
+def test_pareto_excludes_non_finite_records():
+    """Regression: NaN compares false both ways, so a NaN-valued record
+    used to sit on *every* frontier (nothing dominated it); an inf record
+    flushed everything else off.  Both must be dropped deterministically."""
+    nan, inf = float("nan"), float("inf")
+    pts = [_Pt("ok", 2.0, 1.0),
+           _Pt("also-ok", 1.0, 2.0),
+           _Pt("nan-energy", nan, 99.0),
+           _Pt("nan-speedup", 5.0, nan),
+           _Pt("inf", inf, inf),
+           _Pt("neg-inf", -inf, 3.0)]
+    front = pareto_front(pts, ("energy_improvement", "speedup"))
+    assert [p.name for p in front] == ["ok", "also-ok"]
+    # all-degenerate input yields an empty frontier, not a NaN one
+    assert pareto_front(pts[2:], ("energy_improvement", "speedup")) == []
+    # min-objectives get the same guard
+    rows = [{"cost": 1.0, "speedup": 1.0}, {"cost": nan, "speedup": 9.0}]
+    assert pareto_front(rows, (("cost", "min"), "speedup")) == rows[:1]
+
+
+def test_best_excludes_non_finite_metric():
+    """Regression: SweepResults.best used max(), and max() over NaN is
+    order-dependent garbage — NaN records must never win."""
+    from repro.dse import SweepRecord, SweepResults
+
+    def rec(i, energy):
+        return SweepRecord(
+            index=i, workload="NB", cache="32K+256K", cim_levels="L1+L2",
+            tech="sram", cim_set="stt", host="A9-1GHz",
+            energy_improvement=energy, speedup=1.0, macr=0.1, macr_l1=0.1,
+            base_energy_pj=1.0, cim_energy_pj=1.0, base_cycles=1.0,
+            cim_cycles=1.0, base_runtime_ms=1.0, cim_runtime_ms=1.0,
+            processor_ratio=0.5, cache_ratio=0.5, n_instructions=1,
+            n_mem_accesses=1, n_candidates=1, n_cim_ops=1)
+
+    results = SweepResults(records=[rec(0, float("nan")), rec(1, 2.0),
+                                    rec(2, float("inf")), rec(3, 3.0)])
+    assert results.best("energy_improvement").index == 3
+    all_bad = SweepResults(records=[rec(0, float("nan"))])
+    with pytest.raises(ValueError):
+        all_bad.best("energy_improvement")
 
 
 # ------------------------------------------------------------ end-to-end

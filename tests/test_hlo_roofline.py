@@ -119,6 +119,7 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow          # 8-device XLA compile in a subprocess, minutes each
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "moonshot-v1-16b-a3b",
                                   "xlstm-125m"])
 def test_sharded_lowering_8dev(arch):
