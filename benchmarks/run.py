@@ -11,8 +11,8 @@ import time
 
 from benchmarks import (fig12_macr_validation, fig13_macr, fig14_cache_cfg,
                         fig15_levels, fig16_tech, fig17_host, fig_adaptive,
-                        roofline, table3_energy, table5_validation,
-                        table6_speedup, tpu_macr)
+                        fig_tpu_dse, roofline, table3_energy,
+                        table5_validation, table6_speedup, tpu_macr)
 
 ALL = {
     "table3": table3_energy,
@@ -26,6 +26,7 @@ ALL = {
     "fig17": fig17_host,
     "fig_adaptive": fig_adaptive,
     "tpu_macr": tpu_macr,
+    "fig_tpu_dse": fig_tpu_dse,
     "roofline": roofline,
 }
 

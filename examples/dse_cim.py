@@ -40,17 +40,33 @@ axis neighborhoods of non-dominated points, round by round, until the
 frontier is stable — same frontier, a fraction of the points priced::
 
     PYTHONPATH=src python examples/dse_cim.py --workload KM --adaptive
+
+``--backend tpu`` runs the *same* CLI surface through the TPU-mode
+pipeline (``repro.dse.TpuBackend``): workloads are arch ids from
+``repro.configs.registry``, the swept axis is chip preset x fusion
+threshold (``repro.dse.TpuOption``), and every flag above — executor,
+cache dir, adaptive refinement, reports — behaves identically::
+
+    PYTHONPATH=src python examples/dse_cim.py --backend tpu \\
+        --workload qwen1.5-0.5b --chips v5e,v4,v5p --thresholds 16K,64K,256K
 """
 import argparse
 import sys
 
-from repro.dse import AdaptiveDSE, DSEEngine, HOST_PRESETS, SweepSpace
+from repro.dse import (AdaptiveDSE, DSEEngine, HOST_PRESETS, SweepSpace,
+                       TPU_PRESETS, TpuBackend, TpuOption, parse_bytes)
 from repro.workloads import WORKLOADS
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="KM", choices=sorted(WORKLOADS))
+    ap.add_argument("--backend", default="cim", choices=["cim", "tpu"],
+                    help="analysis pipeline: the paper's CiM trace/IDG "
+                         "path, or the TPU-mode jaxpr/HLO fusion path")
+    ap.add_argument("--workload", default=None,
+                    help="CiM: a Table-IV program (default KM); TPU: an "
+                         "arch id from repro.configs.registry (default "
+                         "qwen1.5-0.5b)")
     ap.add_argument("--executor", default="thread",
                     choices=["thread", "process", "serial"])
     ap.add_argument("--cache-dir", default=None,
@@ -58,7 +74,13 @@ def main(argv=None) -> int:
                          "invocations load artifacts instead of re-tracing")
     ap.add_argument("--hosts", default=None,
                     help="comma-separated host presets to sweep "
-                         f"(known: {','.join(HOST_PRESETS)})")
+                         f"(known: {','.join(HOST_PRESETS)}; CiM backend)")
+    ap.add_argument("--chips", default="v5e,v4,v5p",
+                    help="comma-separated TPU chip presets "
+                         f"(known: {','.join(TPU_PRESETS)}; TPU backend)")
+    ap.add_argument("--thresholds", default="16K,64K,256K",
+                    help="comma-separated fusion min_saved_bytes values "
+                         "(TPU backend)")
     ap.add_argument("--report", default=None,
                     help="write the markdown sweep report here")
     ap.add_argument("--json", default=None,
@@ -69,6 +91,13 @@ def main(argv=None) -> int:
                          "points priced)")
     args = ap.parse_args(argv)
 
+    if args.backend == "tpu":
+        return _tpu_main(args)
+
+    args.workload = args.workload or "KM"
+    if args.workload not in WORKLOADS:
+        ap.error(f"unknown workload {args.workload!r}; "
+                 f"known: {sorted(WORKLOADS)}")
     engine = DSEEngine(executor=args.executor, store=args.cache_dir)
     hosts = tuple(args.hosts.split(",")) if args.hosts else (None,)
     space = SweepSpace(workloads=(args.workload,),
@@ -154,6 +183,82 @@ def main(argv=None) -> int:
     if args.report:
         with open(args.report, "w") as f:
             f.write(results.to_markdown())
+        print(f"[report] {args.report}")
+    if args.json:
+        results.to_json(args.json)
+        print(f"[json] {args.json}")
+    return 0
+
+
+def _tpu_main(args) -> int:
+    """The TPU-mode half of the CLI: same flags, same flow, TpuBackend."""
+    from repro.configs.registry import ARCHS
+    workload = args.workload or "qwen1.5-0.5b"
+    if workload not in ARCHS:
+        print(f"unknown arch {workload!r}; known: {sorted(ARCHS)}")
+        return 1
+    chips = tuple(args.chips.split(","))
+    for c in chips:
+        if c not in TPU_PRESETS:
+            print(f"unknown TPU chip preset {c!r}; "
+                  f"known: {sorted(TPU_PRESETS)}")
+            return 1
+    try:
+        thresholds = tuple(parse_bytes(t) for t in args.thresholds.split(","))
+    except ValueError:
+        print(f"bad --thresholds {args.thresholds!r}; expected "
+              f"comma-separated byte counts like 16K,64K,1M")
+        return 1
+    tpus = [TpuOption(TPU_PRESETS[c], t) for c in chips for t in thresholds]
+    engine = DSEEngine(executor=args.executor, store=args.cache_dir,
+                       backend=TpuBackend())
+    space = SweepSpace(workloads=(workload,), tpus=tuple(tpus))
+    print(f"== {workload}: {len(space)} design points, "
+          f"1 jaxpr/HLO analysis ==")
+    if args.adaptive:
+        adaptive = AdaptiveDSE(space, engine=engine).run()
+        for line in adaptive.summary().splitlines():
+            print(f"   {line}")
+        results = adaptive.results
+    else:
+        results = engine.run(space)
+    st = results.stats
+    print(f"   done in {results.elapsed_s:.1f}s "
+          f"(HLO analyses {st.get('trace_builds')}, "
+          f"fusion selections {st.get('offload_builds')})")
+    if args.cache_dir:
+        print(f"   store: {st.get('store_l1_hits', 0)} analysis hits / "
+              f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
+
+    if not args.adaptive:
+        chip0, thr0 = results.records[0].cache, results.records[0].cim_set
+        print(f"== chip slice (threshold {thr0}) ==")
+        for r in results:
+            if r.cim_set == thr0:
+                print(f"  {r.cache:6s} E-impr {r.energy_improvement:5.2f}x "
+                      f"speedup {r.speedup:5.2f}x bound "
+                      f"{r.cim_runtime_ms:.4f}ms")
+        print(f"== fusion-threshold slice (chip {chip0}) ==")
+        for r in results:
+            if r.cache == chip0:
+                print(f"  {r.cim_set:8s} tpu_macr {r.macr:.3f} "
+                      f"E-impr {r.energy_improvement:5.2f}x "
+                      f"speedup {r.speedup:5.2f}x")
+
+    front = (adaptive.frontier if args.adaptive
+             else results.pareto(("energy_improvement", "speedup")))
+    print("== Pareto frontier (energy improvement vs speedup) ==")
+    for r in front:
+        print(f"  {r.workload}/{r.cache}/{r.cim_set:8s} "
+              f"E {r.energy_improvement:5.2f}x spd {r.speedup:5.2f}x")
+
+    if args.report:
+        text = (adaptive.to_markdown() if args.adaptive
+                else results.to_markdown(
+                    columns=("workload", "cache", "cim_set", "macr",
+                             "energy_improvement", "speedup")))
+        with open(args.report, "w") as f:
+            f.write(text)
         print(f"[report] {args.report}")
     if args.json:
         results.to_json(args.json)

@@ -33,6 +33,32 @@ class TpuChip:
 
 V5E = TpuChip()
 
+# ---------------------------------------------------------------------------
+# Named chip design points for the TPU-mode DSE axis (SweepSpace(tpus=...)),
+# mirroring core.host_model.HOST_PRESETS: frozen, hashable constants so
+# SweepPoint hashing/dedup works for TPU-carrying points.  Peak-FLOPs / HBM
+# bandwidth / capacity are public spec-sheet numbers; the pJ constants are
+# literature-class estimates scaled by process generation (v4 oldest, v5p
+# most efficient per byte moved).  Declared in capability order
+# (v5e < v4 < v5p by peak compute), so "adjacent chip" is a physically
+# meaningful adaptive-refinement move.
+# ---------------------------------------------------------------------------
+TPU_PRESETS: Dict[str, TpuChip] = {
+    # the assignment's baseline: 197 bf16 TFLOP/s, 819 GB/s HBM (== V5E)
+    "v5e": V5E,
+    # v4: 275 bf16 TFLOP/s, 1.2 TB/s HBM2, 32 GB — older process, so the
+    # per-op energies sit above the v5 generation's
+    "v4": TpuChip(name="tpu-v4", peak_flops_bf16=275e12, hbm_bw=1228e9,
+                  ici_bw=50e9, hbm_bytes=32e9, vmem_bytes=128e6,
+                  pj_per_flop=0.35, pj_per_hbm_byte=10.0, pj_per_ici_byte=4.0,
+                  pj_per_vmem_byte=0.3),
+    # v5p: 459 bf16 TFLOP/s, 2.76 TB/s HBM, 95 GB, fatter ICI links
+    "v5p": TpuChip(name="tpu-v5p", peak_flops_bf16=459e12, hbm_bw=2765e9,
+                   ici_bw=100e9, hbm_bytes=95e9, vmem_bytes=128e6,
+                   pj_per_flop=0.2, pj_per_hbm_byte=6.0, pj_per_ici_byte=2.5,
+                   pj_per_vmem_byte=0.2),
+}
+
 
 @dataclasses.dataclass
 class RooflineTerms:

@@ -11,6 +11,11 @@ early examples into a subsystem:
   * :mod:`repro.dse.engine`  — executor with a layered analysis cache
     (trace/IDG once per workload+cache, candidate selection once per
     offload config, pricing per point) and thread/process fan-out,
+  * :mod:`repro.dse.backends` — pluggable analysis pipelines behind the
+    engine (analyze → select → price): the paper's CiM trace/IDG path
+    (:class:`CimBackend`, the default) and the TPU-mode jaxpr/HLO fusion
+    path (:class:`TpuBackend`) share the engine, cache, store, and
+    reporting,
   * :mod:`repro.dse.store`   — persistent content-addressed artifact store
     extending the analysis cache across processes and CLI invocations,
   * :mod:`repro.dse.results` — structured records, JSON/markdown reports,
@@ -34,22 +39,29 @@ Quickstart::
     print(results.to_markdown())
 """
 from repro.core.host_model import HOST_PRESETS
+from repro.core.tpu_model import TPU_PRESETS
 from repro.dse.adaptive import (AdaptiveDSE, AdaptiveResult, RoundInfo,
                                 coarse_seed)
+from repro.dse.backends import (AnalysisBackend, CimBackend, TpuBackend,
+                                TpuSelection, TpuWorkloadAnalysis,
+                                arch_fingerprint)
 from repro.dse.engine import AnalysisCache, DSEEngine
 from repro.dse.pareto import (dominates, frontier_stable, objective_vector,
                               pareto_front)
 from repro.dse.results import SweepRecord, SweepResults
 from repro.dse.space import (CACHE_PRESETS, CIM_SETS, LEVEL_PRESETS,
                              CacheOption, HostOption, SweepPoint, SweepSpace,
-                             neighborhood)
+                             TpuOption, neighborhood, parse_bytes,
+                             tpu_neighbors)
 from repro.dse.store import AnalysisStore, workload_fingerprint
 
 __all__ = [
-    "AdaptiveDSE", "AdaptiveResult", "AnalysisCache", "AnalysisStore",
-    "DSEEngine", "RoundInfo", "coarse_seed", "dominates", "frontier_stable",
-    "neighborhood", "objective_vector", "pareto_front", "SweepRecord",
+    "AdaptiveDSE", "AdaptiveResult", "AnalysisBackend", "AnalysisCache",
+    "AnalysisStore", "CimBackend", "DSEEngine", "RoundInfo", "TpuBackend",
+    "TpuSelection", "TpuWorkloadAnalysis", "arch_fingerprint", "coarse_seed",
+    "dominates", "frontier_stable", "neighborhood", "objective_vector",
+    "pareto_front", "parse_bytes", "tpu_neighbors", "SweepRecord",
     "SweepResults", "CACHE_PRESETS", "CIM_SETS", "HOST_PRESETS",
-    "LEVEL_PRESETS", "CacheOption", "HostOption", "SweepPoint", "SweepSpace",
-    "workload_fingerprint",
+    "LEVEL_PRESETS", "TPU_PRESETS", "CacheOption", "HostOption", "SweepPoint",
+    "SweepSpace", "TpuOption", "workload_fingerprint",
 ]

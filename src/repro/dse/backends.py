@@ -1,0 +1,364 @@
+"""Pluggable analysis backends — the analyze → select → price split as an API.
+
+Eva-CiM's claim is that *one tool chain* answers "does this workload
+benefit, at which memory level, with which technology" — and the DSE
+engine's three-phase pipeline (expensive config-independent analysis, cheap
+per-config selection, trivial pricing) is not specific to the CiM
+trace/IDG pipeline at all.  This module names that split:
+
+  :class:`AnalysisBackend`   — the protocol: ``analyze`` (layer 1, once per
+  analysis key), ``select`` (layer 2, once per hardware/threshold config),
+  ``price`` (per point, never cached), composed by ``evaluate``;
+
+  :class:`CimBackend`        — the paper's pipeline, extracted from the
+  engine without behavior change: ``trace_program``/``analyze_trace`` via
+  the :class:`~repro.dse.engine.AnalysisCache` CiM layers, Algorithm-1
+  candidate selection, ``profile_system`` pricing;
+
+  :class:`TpuBackend`        — the TPU-mode adaptation (DESIGN.md §3): one
+  jaxpr/HLO analysis per (workload, shape) —
+  :func:`~repro.core.hlo.fusion_candidates` over the arch registry's
+  reduced train step plus :func:`~repro.core.hlo_cost.analyze_hlo` over its
+  lowered HLO — then per-:class:`~repro.dse.space.TpuOption` fusion
+  selection (``min_saved_bytes`` threshold + VMEM fit) and roofline/energy
+  pricing on a :class:`~repro.core.tpu_model.TpuChip`.
+
+Both backends run through the same :class:`~repro.dse.engine.DSEEngine`
+(``DSEEngine(backend=TpuBackend())``), the same
+:class:`~repro.dse.results.SweepResults` reporting, the same persistent
+:class:`~repro.dse.store.AnalysisStore` (artifacts are namespaced by
+backend name + version stamp, so one cache directory serves both), and the
+same :class:`~repro.dse.adaptive.AdaptiveDSE` refinement loop
+(:func:`~repro.dse.space.tpu_neighbors` supplies the backend-aware moves).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import hashlib
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.host_model import HostModel
+from repro.core.profiler import profile_system
+from repro.core.tpu_model import TpuChip, roofline_terms, step_energy_pj
+from repro.dse.results import SweepRecord
+from repro.dse.space import HostOption, SweepPoint, TpuOption
+
+# Version stamp of the TPU analysis/selection/pricing semantics, mixed into
+# every persisted TPU artifact key (the TPU analogue of
+# core.trace.TRACE_VM_VERSION + core.offload.ANALYSIS_VERSION).  Bump it
+# when fusion_candidates/analyze_hlo interpretation, the selection rule, or
+# the artifact schema changes: old TPU artifacts become unreachable while
+# every other backend's stay warm.
+TPU_ANALYSIS_VERSION = 1
+
+
+class AnalysisBackend(abc.ABC):
+    """One pipeline behind the engine: analyze → select → price.
+
+    ==========  ==============================  ===========================
+    phase       memoized by                     CiM / TPU incarnation
+    ==========  ==============================  ===========================
+    analyze     layer 1 (workload + geometry)   trace+IDG  /  jaxpr+HLO
+    select      layer 2 (+ per-config knobs)    Algorithm 1  /  fusion thr
+    price       never (cheap, fanned out)       profile_system / roofline
+    ==========  ==============================  ===========================
+
+    Backends are small frozen dataclasses: picklable (they ride to
+    ``executor="process"`` workers) and stateless — all memoization lives
+    in the :class:`~repro.dse.engine.AnalysisCache` they are handed, all
+    persistence in the :class:`~repro.dse.store.AnalysisStore` behind it.
+
+    ``name`` namespaces persisted artifacts; ``version`` stamps them (a
+    bump invalidates this backend's store entries and no one else's).
+    """
+
+    name: str = "abstract"
+
+    @property
+    def version(self) -> int:
+        return 0
+
+    # ------------------------------------------------------------- phases
+    @abc.abstractmethod
+    def analyze(self, cache, point: SweepPoint) -> Any:
+        """Layer-1 artifact for ``point`` (built once per analysis key)."""
+
+    @abc.abstractmethod
+    def select(self, cache, point: SweepPoint, analysis: Any) -> Any:
+        """Layer-2 artifact (built once per selection-relevant config)."""
+
+    @abc.abstractmethod
+    def price(self, point: SweepPoint, analysis: Any, selection: Any,
+              host: HostModel) -> SweepRecord:
+        """One priced record — pure function of the two artifacts."""
+
+    # ---------------------------------------------------------- composite
+    def evaluate(self, cache, point: SweepPoint,
+                 host: HostModel) -> SweepRecord:
+        analysis = self.analyze(cache, point)
+        selection = self.select(cache, point, analysis)
+        return self.price(point, analysis, selection, host)
+
+    def warm(self, cache, point: SweepPoint) -> None:
+        """Build the layer-1 artifact ahead of the pricing fan-out (the
+        engine warms each analysis key serially for deterministic build
+        order and exactly one expensive pass per key)."""
+        self.analyze(cache, point)
+
+
+# ======================================================================
+# CiM — the paper's pipeline, extracted from the engine unchanged
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class CimBackend(AnalysisBackend):
+    """Eva-CiM's trace → Algorithm-1 selection → McPAT/DESTINY pricing.
+
+    A thin naming of what ``DSEEngine`` always did: the layer-1/2 memo
+    logic (including the persistent-store integration and its version
+    stamps, ``TRACE_VM_VERSION`` / ``ANALYSIS_VERSION``) stays in
+    :class:`~repro.dse.engine.AnalysisCache`, so records, counters, and
+    fig14–17 artifacts are identical to the pre-backend engine.
+    """
+
+    name = "cim"
+
+    @property
+    def version(self) -> int:
+        from repro.core.trace import TRACE_VM_VERSION
+        return TRACE_VM_VERSION
+
+    def analyze(self, cache, point: SweepPoint):
+        return cache.trace(point.workload, point.cache)
+
+    def select(self, cache, point: SweepPoint, analysis):
+        return cache.offload(point.workload, point.cache,
+                             point.offload_config())
+
+    def price(self, point: SweepPoint, analysis, selection,
+              host: HostModel) -> SweepRecord:
+        if point.host is not None:               # host axis: point overrides
+            host = point.host.model
+            name = point.host.name
+        else:
+            # collision-safe label for a custom engine-default model too
+            name = HostOption.of(host).name
+        result, reshaped = selection
+        rep = profile_system(analysis, tech=point.tech, host=host,
+                             offload=result, reshaped=reshaped)
+        return SweepRecord.from_report(point, rep, host=host, host_name=name)
+
+
+# ======================================================================
+# TPU — jaxpr/HLO fusion analysis, threshold selection, roofline pricing
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class TpuCandidate:
+    """One VMEM-fusable chain, reduced to the numbers selection/pricing
+    need (the jaxpr itself is not persisted)."""
+    n_ops: int
+    input_bytes: int
+    output_bytes: int
+    saved_bytes: int
+
+    @property
+    def workset_bytes(self) -> int:
+        """Resident footprint of the fused kernel: live inputs + outputs +
+        the intermediates it keeps in VMEM (saved_bytes counts each
+        intermediate's eliminated store+load, i.e. twice its size)."""
+        return self.input_bytes + self.output_bytes + self.saved_bytes // 2
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuWorkloadAnalysis:
+    """Layer-1 TPU artifact: everything per-(workload, shape) and
+    config-independent — picklable, so it persists like a CiM trace."""
+    workload: str
+    batch: int
+    seq_len: int
+    flops: float                   # trip-count-aware HLO matmul FLOPs
+    total_bytes: int               # jaxpr tensor traffic if nothing fuses
+    collective_bytes: float        # per-device collective bytes (0 off-mesh)
+    hlo_bytes: float               # HLO top-level op footprint (reporting)
+    n_eqns: int
+    candidates: Tuple[TpuCandidate, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSelection:
+    """Layer-2 TPU artifact: which candidates a TpuOption realizes."""
+    n_accepted: int
+    accepted_ops: int
+    saved_bytes: int
+    min_saved_bytes: int
+    vmem_bytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuBackend(AnalysisBackend):
+    """TPU-mode Eva-CiM: "does this model step benefit from VMEM-resident
+    fusion, on which chip, at which aggressiveness".
+
+    Workload names are arch ids from :data:`repro.configs.registry.ARCHS`;
+    ``analyze`` traces the arch's *reduced* train step once per
+    (workload, batch, seq_len): ``jax.make_jaxpr`` →
+    :func:`~repro.core.hlo.fusion_candidates` for the fusable chains, and
+    a (compile-free) ``jit(...).lower()`` →
+    :func:`~repro.core.hlo_cost.analyze_hlo` for trip-count-aware FLOPs.
+    ``select`` realizes the candidates that clear the point's
+    :class:`~repro.dse.space.TpuOption` ``min_saved_bytes`` threshold *and*
+    fit its (possibly scaled) VMEM.  ``price`` compares the unfused and
+    fused steps under the option's chip: roofline bound time
+    (:func:`~repro.core.tpu_model.roofline_terms`) and step energy
+    (:func:`~repro.core.tpu_model.step_energy_pj`, with the eliminated HBM
+    traffic re-priced as VMEM traffic rather than dropped).
+
+    ``default_tpu`` prices points with no ``tpu`` axis value, mirroring
+    the engine-default host of the CiM path.
+    """
+
+    batch: int = 2
+    seq_len: int = 32
+    default_tpu: TpuOption = TpuOption.of("v5e")
+
+    name = "tpu"
+
+    @property
+    def version(self) -> int:
+        return TPU_ANALYSIS_VERSION
+
+    # ------------------------------------------------------------ layer 1
+    def _layer1_spec(self, workload: str) -> Dict:
+        return {"backend": self.name, "version": self.version,
+                "workload": workload,
+                "fingerprint": arch_fingerprint(workload),
+                "shape": [self.batch, self.seq_len]}
+
+    def analyze(self, cache, point: SweepPoint) -> TpuWorkloadAnalysis:
+        key = ("tpu", point.workload, self.batch, self.seq_len)
+        return cache.artifact(
+            1, key, lambda: self._analyze(point.workload),
+            store_spec=self._layer1_spec(point.workload))
+
+    def _analyze(self, workload: str) -> TpuWorkloadAnalysis:
+        import jax                         # late: keep repro.dse importable
+        import jax.numpy as jnp
+        from repro.configs.base import TrainConfig
+        from repro.configs.registry import reduced_config
+        from repro.core.hlo import fusion_candidates
+        from repro.core.hlo_cost import analyze_hlo
+        from repro.models import inputs as minputs
+        from repro.train import steps as steps_mod
+
+        cfg = reduced_config(workload)
+        rng = jax.random.PRNGKey(0)
+        state = jax.eval_shape(lambda r: steps_mod.init_train_state(r, cfg),
+                               rng)
+        batch = minputs.make_train_batch(rng, cfg, batch=self.batch,
+                                         seq_len=self.seq_len)
+        step = steps_mod.make_train_step(cfg, TrainConfig())
+        zeros = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), state)
+        jx = jax.make_jaxpr(step)(zeros, batch)
+        rep = fusion_candidates(jx)
+        cost = analyze_hlo(jax.jit(step).lower(zeros, batch)
+                           .as_text(dialect="hlo"))
+        return TpuWorkloadAnalysis(
+            workload=workload, batch=self.batch, seq_len=self.seq_len,
+            flops=cost.flops, total_bytes=rep.total_bytes,
+            collective_bytes=cost.collective_total, hlo_bytes=cost.bytes,
+            n_eqns=len(jx.jaxpr.eqns),
+            candidates=tuple(
+                TpuCandidate(c.n_ops, c.input_bytes, c.output_bytes,
+                             c.saved_bytes) for c in rep.candidates))
+
+    # ------------------------------------------------------------ layer 2
+    def _option(self, point: SweepPoint) -> TpuOption:
+        return point.tpu if point.tpu is not None else self.default_tpu
+
+    def select(self, cache, point: SweepPoint,
+               analysis: TpuWorkloadAnalysis) -> TpuSelection:
+        opt = self._option(point)
+        vmem = opt.effective_chip().vmem_bytes
+        key = ("tpu", analysis.workload, analysis.batch, analysis.seq_len,
+               opt.min_saved_bytes, vmem)
+        return cache.artifact(
+            2, key, lambda: self._select(analysis, opt.min_saved_bytes, vmem))
+
+    @staticmethod
+    def _select(analysis: TpuWorkloadAnalysis, min_saved_bytes: int,
+                vmem_bytes: float) -> TpuSelection:
+        accepted = [c for c in analysis.candidates
+                    if c.saved_bytes >= min_saved_bytes
+                    and c.workset_bytes <= vmem_bytes]
+        return TpuSelection(
+            n_accepted=len(accepted),
+            accepted_ops=sum(c.n_ops for c in accepted),
+            saved_bytes=sum(c.saved_bytes for c in accepted),
+            min_saved_bytes=min_saved_bytes, vmem_bytes=vmem_bytes)
+
+    # ------------------------------------------------------------ pricing
+    def price(self, point: SweepPoint, analysis: TpuWorkloadAnalysis,
+              selection: TpuSelection, host: HostModel) -> SweepRecord:
+        opt = self._option(point)
+        chip = opt.effective_chip()
+        base_bytes = float(analysis.total_bytes)
+        fused_bytes = base_bytes - selection.saved_bytes
+        coll = analysis.collective_bytes
+        base = roofline_terms(analysis.flops, base_bytes, coll, 1, chip=chip)
+        fused = roofline_terms(analysis.flops, fused_bytes, coll, 1,
+                               chip=chip)
+        base_e = step_energy_pj(analysis.flops, base_bytes, coll, 1,
+                                chip=chip)
+        fused_e = step_energy_pj(analysis.flops, fused_bytes, coll, 1,
+                                 chip=chip)
+        # eliminated HBM round-trips still move through VMEM — re-priced,
+        # not free (the Eva-CiM analogue: CiM ops still cost array energy)
+        fused_total = (fused_e["total_pj"]
+                       + selection.saved_bytes * chip.pj_per_vmem_byte)
+        macr = (selection.saved_bytes / base_bytes) if base_bytes else 0.0
+        # "cycles" columns hold the roofline bound in ns (1 GHz convention),
+        # so runtime_ms = cycles / 1e9 * 1e3 matches the CiM records' shape
+        return SweepRecord(
+            index=point.index, workload=point.workload,
+            cache=opt.chip_label, cim_levels="VMEM", tech="tpu",
+            cim_set=opt.threshold_label, host="-",
+            energy_improvement=(base_e["total_pj"] / fused_total
+                                if fused_total else 1.0),
+            speedup=base.bound_s / fused.bound_s if fused.bound_s else 1.0,
+            macr=macr, macr_l1=macr,
+            base_energy_pj=base_e["total_pj"], cim_energy_pj=fused_total,
+            base_cycles=base.bound_s * 1e9, cim_cycles=fused.bound_s * 1e9,
+            base_runtime_ms=base.bound_s * 1e3,
+            cim_runtime_ms=fused.bound_s * 1e3,
+            processor_ratio=(base_e["compute_pj"] / base_e["total_pj"]
+                             if base_e["total_pj"] else 0.0),
+            cache_ratio=(base_e["hbm_pj"] / base_e["total_pj"]
+                         if base_e["total_pj"] else 0.0),
+            n_instructions=analysis.n_eqns,
+            n_mem_accesses=int(analysis.total_bytes),
+            n_candidates=len(analysis.candidates),
+            n_cim_ops=selection.accepted_ops,
+            backend=self.name)
+
+
+_ARCH_FINGERPRINTS: Dict[str, str] = {}
+
+
+def arch_fingerprint(workload: str) -> str:
+    """Content hash of a TPU workload: the arch id + its *reduced config*
+    (every field that shapes the traced step).  Editing a config — layer
+    count, widths, MoE/SSM structure — invalidates the persisted analysis;
+    unknown archs degrade to a name-only fingerprint."""
+    cached = _ARCH_FINGERPRINTS.get(workload)
+    if cached is not None:
+        return cached
+    spec = ""
+    try:
+        from repro.configs.registry import reduced_config
+        spec = repr(reduced_config(workload))
+    except Exception:  # noqa: BLE001 — unknown arch / unimportable configs
+        spec = ""
+    digest = hashlib.sha256(f"{workload}\n{spec}".encode()).hexdigest()[:16]
+    _ARCH_FINGERPRINTS[workload] = digest
+    return digest

@@ -23,6 +23,14 @@ re-tracing.  The :class:`DSEEngine` walks a
 cache once per analysis key, and fans the cheap pricing phase out over a
 worker pool ("thread", "process", or "serial") — results always come back
 in SweepPoint order regardless of executor scheduling.
+
+The three-phase split itself is owned by a pluggable
+:class:`~repro.dse.backends.AnalysisBackend` (``DSEEngine(backend=...)``):
+the table above describes the default CiM pipeline
+(:class:`~repro.dse.backends.CimBackend`), while
+:class:`~repro.dse.backends.TpuBackend` runs the same engine/cache/store
+machinery over jaxpr/HLO fusion analyses of the arch registry's train
+steps (generic artifacts memoized via :meth:`AnalysisCache.artifact`).
 """
 from __future__ import annotations
 
@@ -36,16 +44,16 @@ import threading
 import time
 import weakref
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.host_model import DEFAULT_HOST, HostModel
 from repro.core.offload import (OffloadConfig, OffloadResult, TraceAnalysis,
                                 analyze_trace, rehydrate_analysis)
-from repro.core.profiler import profile_system
 from repro.core.reshape import ReshapedTrace, reshape
 from repro.core.trace import TraceResult, trace_program
+from repro.dse.backends import AnalysisBackend, CimBackend
 from repro.dse.results import SweepRecord, SweepResults
-from repro.dse.space import CacheOption, HostOption, SweepPoint, SweepSpace
+from repro.dse.space import CacheOption, SweepPoint, SweepSpace
 from repro.dse.store import AnalysisStore
 
 
@@ -73,6 +81,7 @@ class AnalysisCache:
         self._traces: Dict[Tuple, TraceResult] = {}
         self._analyses: Dict[Tuple, TraceAnalysis] = {}
         self._offloads: Dict[Tuple, Tuple[OffloadResult, ReshapedTrace]] = {}
+        self._blobs: Dict[Tuple, Any] = {}     # generic backend artifacts
         self._lock = threading.RLock()
         self._key_locks: Dict[Tuple, threading.Lock] = {}
         self.trace_builds = 0
@@ -171,6 +180,46 @@ class AnalysisCache:
                                        result, reshaped)
             return result, reshaped
 
+    # ---------------------------------------------------- generic artifacts
+    def artifact(self, layer: int, key: Tuple, build: Callable[[], Any],
+                 store_spec: Optional[dict] = None) -> Any:
+        """Backend-agnostic layered memo (see :mod:`repro.dse.backends`).
+
+        ``layer`` picks the counter pair the lookup accounts under — 1 for
+        the expensive analysis phase (``trace_builds``/``trace_hits``), 2
+        for selection (``offload_builds``/``offload_hits``) — so non-CiM
+        backends report cost through the exact counters tests and sweep
+        reports already assert on.  ``store_spec`` (a JSON-able key spec
+        that must include the backend's name + version stamp) additionally
+        persists the artifact through the
+        :class:`~repro.dse.store.AnalysisStore`: store loads count as
+        neither build nor memo hit, mirroring the CiM layers, so
+        ``trace_builds == 0`` still means "a warm run did no analysis
+        work".  Per-key build locks: concurrent misses build once."""
+        builds, hits = (("trace_builds", "trace_hits") if layer == 1
+                        else ("offload_builds", "offload_hits"))
+        full_key = (layer,) + key
+        with self._key_lock(("blob",) + full_key):
+            with self._lock:
+                if full_key in self._blobs:
+                    setattr(self, hits, getattr(self, hits) + 1)
+                    return self._blobs[full_key]
+            if self.store is not None and store_spec is not None:
+                payload = self.store.load_blob(layer, store_spec)
+                if payload is not None:
+                    value = payload["artifact"]
+                    with self._lock:
+                        self._blobs[full_key] = value
+                    return value
+            with self._lock:
+                setattr(self, builds, getattr(self, builds) + 1)
+            value = build()
+            with self._lock:
+                self._blobs[full_key] = value
+            if self.store is not None and store_spec is not None:
+                self.store.save_blob(layer, store_spec, {"artifact": value})
+            return value
+
     def stats(self) -> Dict[str, int]:
         out = {"trace_builds": self.trace_builds,
                "trace_hits": self.trace_hits,
@@ -191,6 +240,7 @@ _WORKER_CACHES: Dict[Tuple[Optional[str], Optional[int]], AnalysisCache] = {}
 
 
 def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
+                  backend: AnalysisBackend,
                   store_root: Optional[str] = None,
                   store_version: Optional[int] = None
                   ) -> Tuple[List[SweepRecord], Dict[str, int]]:
@@ -200,9 +250,10 @@ def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
     :class:`~repro.dse.store.AnalysisStore` at ``store_root``: the first
     worker to need a key builds it once and publishes the artifact, every
     other process (and every later run) loads it — one *global* analysis
-    per key, not one per worker.  Returns the records plus this chunk's
-    delta of the cache+store counters, so the parent can report true build
-    totals across all workers."""
+    per key, not one per worker.  ``backend`` is the engine's (pickled
+    along: backends are small frozen dataclasses).  Returns the records
+    plus this chunk's delta of the cache+store counters, so the parent can
+    report true build totals across all workers."""
     cache_key = (store_root, store_version)
     cache = _WORKER_CACHES.get(cache_key)
     if cache is None:
@@ -210,25 +261,9 @@ def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
                  if store_root is not None else None)
         cache = _WORKER_CACHES[cache_key] = AnalysisCache(store=store)
     before = cache.stats()
-    records = [_evaluate(cache, p, host) for p in points]
+    records = [backend.evaluate(cache, p, host) for p in points]
     delta = {k: v - before.get(k, 0) for k, v in cache.stats().items()}
     return records, delta
-
-
-def _evaluate(cache: AnalysisCache, point: SweepPoint, host: HostModel
-              ) -> SweepRecord:
-    if point.host is not None:                   # host axis: point overrides
-        host = point.host.model
-        name = point.host.name
-    else:
-        # collision-safe label for a custom engine-default model too
-        name = HostOption.of(host).name
-    tr = cache.trace(point.workload, point.cache)
-    result, reshaped = cache.offload(point.workload, point.cache,
-                                     point.offload_config())
-    rep = profile_system(tr, tech=point.tech, host=host,
-                         offload=result, reshaped=reshaped)
-    return SweepRecord.from_report(point, rep, host=host, host_name=name)
 
 
 class DSEEngine:
@@ -258,6 +293,14 @@ class DSEEngine:
     ``host`` — the default :class:`~repro.core.host_model.HostModel` used
     to price points that do not carry their own (a
     ``SweepSpace(hosts=...)`` axis overrides it per point).
+
+    ``backend`` — the :class:`~repro.dse.backends.AnalysisBackend` that
+    owns the analyze → select → price split behind this engine; defaults
+    to the paper's CiM pipeline
+    (:class:`~repro.dse.backends.CimBackend`).  Pass
+    ``TpuBackend()`` to sweep :class:`~repro.dse.space.TpuOption` axes
+    over the arch registry's train steps instead — same engine, caching,
+    executors, and reporting.
     """
 
     def __init__(self, cache: Optional[AnalysisCache] = None,
@@ -265,7 +308,8 @@ class DSEEngine:
                  executor: str = "thread",
                  max_workers: Optional[int] = None,
                  store: Optional[Union[AnalysisStore, str,
-                                       pathlib.Path]] = None):
+                                       pathlib.Path]] = None,
+                 backend: Optional[AnalysisBackend] = None):
         if executor not in ("thread", "process", "serial"):
             raise ValueError(f"unknown executor {executor!r}")
         if cache is not None and store is not None:
@@ -273,6 +317,7 @@ class DSEEngine:
                              "build AnalysisCache(store=...) yourself)")
         self.analysis = cache or AnalysisCache(store=store)
         self.host = host
+        self.backend = backend or CimBackend()
         self.executor = executor
         self.max_workers = max_workers or min(8, os.cpu_count() or 1)
         self._scratch_store: Optional[AnalysisStore] = None
@@ -293,7 +338,7 @@ class DSEEngine:
     # ------------------------------------------------------------ pieces
     def evaluate(self, point: SweepPoint) -> SweepRecord:
         """Price one design point (memoized analysis)."""
-        return _evaluate(self.analysis, point, self.host)
+        return self.backend.evaluate(self.analysis, point, self.host)
 
     @staticmethod
     def _chunks(points: Sequence[SweepPoint]) -> List[List[SweepPoint]]:
@@ -337,7 +382,7 @@ class DSEEngine:
             ctx = multiprocessing.get_context("spawn")
             with ProcessPoolExecutor(max_workers=self.max_workers,
                                      mp_context=ctx) as pool:
-                futs = [pool.submit(_worker_chunk, c, self.host,
+                futs = [pool.submit(_worker_chunk, c, self.host, self.backend,
                                     str(store.root), store.version)
                         for c in chunks]
                 worker_stats = {}
@@ -349,10 +394,9 @@ class DSEEngine:
                         worker_stats[k] = worker_stats.get(k, 0) + v
         else:
             # warm the analysis cache serially (deterministic build order,
-            # exactly one trace pass per key), then fan pricing out
+            # exactly one expensive analysis pass per key), then fan out
             for chunk in self._chunks(points):
-                head = chunk[0]
-                self.analysis.trace(head.workload, head.cache)
+                self.backend.warm(self.analysis, chunk[0])
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 for rec in pool.map(self.evaluate, points):
                     records[rec.index] = rec

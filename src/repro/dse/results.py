@@ -61,6 +61,11 @@ class SweepRecord:
     # provenance: which refinement round priced this point (0 = the coarse
     # seed sweep; one-shot sweeps leave it 0)
     round: int = 0
+    # which analysis backend priced it ("cim" trace/IDG pipeline or "tpu"
+    # jaxpr/HLO fusion pipeline — see repro.dse.backends); for TPU records
+    # `cache` holds the chip label, `cim_levels` is "VMEM", `cim_set` the
+    # fusion threshold, and the cycle columns the roofline bound in ns
+    backend: str = "cim"
 
     @classmethod
     def from_report(cls, point: SweepPoint, rep: SystemReport,

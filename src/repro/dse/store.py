@@ -37,6 +37,14 @@ Durability rules:
 so a second CLI sweep over the same design space performs zero trace
 builds, and ``executor="process"`` workers share one global analysis per
 key through the store instead of rebuilding per worker.
+
+Every key is additionally namespaced by the analysis *backend* that owns
+the artifact: the CiM layer-1/2 keys above carry ``backend: "cim"``, and
+non-CiM backends (:mod:`repro.dse.backends`) persist through the generic
+:meth:`AnalysisStore.load_blob` / :meth:`AnalysisStore.save_blob` API with
+their own key spec — which must include the backend's name and version
+stamp, so CiM and TPU artifacts coexist in one cache directory and a
+version bump invalidates exactly one backend's entries.
 """
 from __future__ import annotations
 
@@ -142,6 +150,7 @@ class AnalysisStore:
                    cache_levels: Sequence[CacheConfig]) -> str:
         return self._key({
             "layer": 1,
+            "backend": "cim",               # namespaced: backends share a dir
             "workload": workload,
             "fingerprint": workload_fingerprint(workload),
             "cache": _cache_geometry(cache_levels),
@@ -152,6 +161,7 @@ class AnalysisStore:
                    cfg: OffloadConfig) -> str:
         return self._key({
             "layer": 2,
+            "backend": "cim",
             "workload": workload,
             "fingerprint": workload_fingerprint(workload),
             "cache": _cache_geometry(cache_levels),
@@ -162,6 +172,26 @@ class AnalysisStore:
 
     def _path(self, layer: int, key: str) -> pathlib.Path:
         return self.root / f"layer{layer}" / f"{key}.pkl"
+
+    # ------------------------------------------------- generic backend blobs
+    # Non-CiM analysis backends persist their artifacts through these: the
+    # caller owns the key spec (and must mix in its backend name + version
+    # stamp — see repro.dse.backends), the store owns addressing, atomic
+    # writes, verification, and the hit/miss/write counters.  Specs from
+    # different backends can never collide (the "backend" field namespaces
+    # them), so CiM and TPU artifacts coexist in one cache directory.
+    def load_blob(self, layer: int, spec: dict) -> Optional[dict]:
+        key = self._key({"layer": layer, **spec})
+        payload = self._read(self._path(layer, key), key)
+        if payload is None:
+            self._bump("l1_misses" if layer == 1 else "l2_misses")
+            return None
+        self._bump("l1_hits" if layer == 1 else "l2_hits")
+        return payload
+
+    def save_blob(self, layer: int, spec: dict, payload: dict) -> None:
+        key = self._key({"layer": layer, **spec})
+        self._write(self._path(layer, key), key, payload)
 
     # ---------------------------------------------------------------- io
     def _read(self, path: pathlib.Path, expect_key: str) -> Optional[dict]:

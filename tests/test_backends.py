@@ -1,0 +1,232 @@
+"""repro.dse.backends: the analyze -> select -> price protocol — TPU-mode
+sweeps through the shared engine, TpuOption axis enumeration, selection
+semantics (threshold + VMEM fit), roofline pricing invariants, and
+adaptive refinement over the chip/threshold sub-axes."""
+import dataclasses
+import pickle
+
+import pytest
+
+from repro.dse import (AdaptiveDSE, CimBackend, DSEEngine, SweepSpace,
+                       TPU_PRESETS, TpuBackend, TpuOption, parse_bytes,
+                       tpu_neighbors)
+from repro.dse.backends import (TpuCandidate, TpuSelection,
+                                TpuWorkloadAnalysis)
+
+# the two cheapest arch-registry workloads (~1-2s of jaxpr/HLO analysis
+# each); the module-scoped engine below amortizes them across all tests
+ARCHS2 = ("qwen1.5-0.5b", "xlstm-125m")
+KB = 1 << 10
+
+
+@pytest.fixture(scope="module")
+def tpu_engine():
+    return DSEEngine(backend=TpuBackend())
+
+
+# --------------------------------------------------------------- options
+def test_tpu_option_of_and_labels():
+    opt = TpuOption.of("v5e")
+    assert opt.chip == TPU_PRESETS["v5e"]
+    assert opt.name == "v5e/thr64K"
+    assert TpuOption.of(opt) is opt
+    assert TpuOption.of(TPU_PRESETS["v4"]).chip_label == "v4"
+    with pytest.raises(KeyError):
+        TpuOption.of("v99")
+    scaled = TpuOption(TPU_PRESETS["v5e"], 1 << 20, vmem_scale=0.5,
+                       hbm_bw_scale=2.0)
+    assert scaled.threshold_label == "thr1M"
+    assert "vmem0.5" in scaled.chip_label and "bw2" in scaled.chip_label
+    chip = scaled.effective_chip()
+    assert chip.vmem_bytes == TPU_PRESETS["v5e"].vmem_bytes * 0.5
+    assert chip.hbm_bw == TPU_PRESETS["v5e"].hbm_bw * 2.0
+    # unscaled options hand back the preset object itself
+    assert TpuOption.of("v5p").effective_chip() is TPU_PRESETS["v5p"]
+
+
+def test_parse_bytes():
+    assert parse_bytes("16K") == 1 << 14
+    assert parse_bytes("1M") == 1 << 20
+    assert parse_bytes("4096") == 4096
+    assert parse_bytes(512) == 512
+
+
+def test_tpu_presets_frozen_hashable():
+    assert len({hash(c) for c in TPU_PRESETS.values()}) == 3
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        TPU_PRESETS["v4"].hbm_bw = 1.0
+    # capability-ordered declaration (the adjacency contract)
+    peaks = [c.peak_flops_bf16 for c in TPU_PRESETS.values()]
+    assert peaks == sorted(peaks)
+
+
+# ------------------------------------------------------------ enumeration
+def test_space_tpu_axis_enumeration():
+    tpus = (TpuOption.of("v5e"), TpuOption(TPU_PRESETS["v4"], 32 * KB))
+    space = SweepSpace(workloads=ARCHS2, tpus=tpus)
+    pts = space.points()
+    assert len(pts) == len(space) == 4
+    # TPU axis iterates innermost and never splits the per-workload
+    # analysis chunk (one jaxpr/HLO pass per workload)
+    assert [p.tpu.chip_label for p in pts[:2]] == ["v5e", "v4"]
+    assert len({p.analysis_key for p in pts}) == 2
+    assert pts[0].analysis_key == ("qwen1.5-0.5b", "tpu")
+    # TPU points hash (dedup backbone) and carry the option in key/label
+    assert len({hash(p) for p in pts}) == 4
+    assert len({p.key for p in pts}) == 4
+    assert pts[1].label == "qwen1.5-0.5b/v4/thr32K"
+    # CiM spaces are untouched by the new axis default
+    cim = SweepSpace(workloads=("KM",))
+    assert cim.points()[0].tpu is None
+
+
+# -------------------------------------------------------------- selection
+def _analysis(candidates):
+    return TpuWorkloadAnalysis(
+        workload="w", batch=2, seq_len=32, flops=1e9,
+        total_bytes=sum(c.saved_bytes for c in candidates) * 2 or 1,
+        collective_bytes=0.0, hlo_bytes=0.0, n_eqns=9,
+        candidates=tuple(candidates))
+
+
+def test_selection_threshold_and_vmem_fit():
+    small = TpuCandidate(n_ops=2, input_bytes=4 * KB, output_bytes=4 * KB,
+                         saved_bytes=8 * KB)
+    big = TpuCandidate(n_ops=5, input_bytes=64 * KB, output_bytes=64 * KB,
+                       saved_bytes=512 * KB)
+    an = _analysis([small, big])
+    # threshold filters the small chain out
+    sel = TpuBackend._select(an, min_saved_bytes=64 * KB, vmem_bytes=1e9)
+    assert (sel.n_accepted, sel.saved_bytes) == (1, 512 * KB)
+    # zero threshold accepts both
+    sel = TpuBackend._select(an, min_saved_bytes=0, vmem_bytes=1e9)
+    assert sel.n_accepted == 2 and sel.accepted_ops == 7
+    # a VMEM too small for the big chain's working set rejects it even
+    # though it clears the threshold (workset = in + out + saved/2)
+    assert big.workset_bytes == (64 + 64 + 256) * KB
+    sel = TpuBackend._select(an, min_saved_bytes=0,
+                             vmem_bytes=big.workset_bytes - 1)
+    assert sel.n_accepted == 1 and sel.saved_bytes == small.saved_bytes
+
+
+# ------------------------------------------------------------- end-to-end
+def test_tpu_sweep_end_to_end(tpu_engine):
+    tpus = [TpuOption(TPU_PRESETS[c], t)
+            for c in ("v5e", "v4") for t in (16 * KB, 256 * KB)]
+    space = SweepSpace(workloads=ARCHS2, tpus=tpus)
+    results = tpu_engine.run(space)
+    assert len(results) == 8
+    st = results.stats
+    # one jaxpr/HLO analysis per workload; one fusion selection per
+    # (workload, threshold) — chips share both layers (pricing-only)
+    assert st["trace_builds"] == 2
+    assert st["offload_builds"] == 4
+    for r in results:
+        assert r.backend == "tpu"
+        assert r.tech == "tpu" and r.cim_levels == "VMEM"
+        assert 0.0 <= r.macr <= 1.0
+        assert r.speedup >= 1.0 and r.energy_improvement >= 1.0
+        assert r.base_energy_pj > r.cim_energy_pj or r.macr == 0.0
+        assert r.n_candidates > 0
+    # fusion aggressiveness is monotone: a higher threshold never saves
+    # more traffic than a lower one (same workload, same chip)
+    by = {(r.workload, r.cache, r.cim_set): r for r in results}
+    for w in ARCHS2:
+        for chip in ("v5e", "v4"):
+            assert (by[(w, chip, "thr16K")].macr
+                    >= by[(w, chip, "thr256K")].macr)
+    # re-running does zero analysis work (per-run counter deltas)
+    again = tpu_engine.run(space)
+    assert again.stats["trace_builds"] == 0
+    assert again.stats["offload_builds"] == 0
+    assert [r.energy_improvement for r in again] == \
+        [r.energy_improvement for r in results]
+
+
+def test_vmem_scale_gates_selection(tpu_engine):
+    """A VMEM scaled to nothing rejects every candidate: the point prices
+    as the unfused baseline (macr 0, improvement exactly 1.0)."""
+    opt = TpuOption(TPU_PRESETS["v5e"], 16 * KB, vmem_scale=1e-9)
+    space = SweepSpace(workloads=(ARCHS2[1],), tpus=(opt,))
+    (rec,) = tpu_engine.run(space).records
+    assert rec.macr == 0.0
+    assert rec.energy_improvement == 1.0 and rec.speedup == 1.0
+
+
+def test_tpu_records_report_and_pareto(tpu_engine):
+    tpus = [TpuOption(TPU_PRESETS["v5e"], t) for t in (16 * KB, 256 * KB)]
+    results = tpu_engine.run(SweepSpace(workloads=(ARCHS2[0],), tpus=tpus))
+    md = results.to_markdown(columns=("workload", "cache", "cim_set",
+                                      "energy_improvement", "speedup"))
+    assert "thr16K" in md and "Pareto frontier" in md
+    front = results.pareto(("energy_improvement", "speedup"))
+    assert front and all(r.backend == "tpu" for r in front)
+
+
+# ------------------------------------------------------------- neighbors
+def test_tpu_neighbors_single_knob_moves():
+    chips = [TPU_PRESETS[c] for c in ("v5e", "v4", "v5p")]
+    thrs = [16 * KB, 64 * KB, 256 * KB]
+    grid = [TpuOption(c, t) for c in chips for t in thrs]
+    mid = TpuOption(chips[1], thrs[1])
+    nbs = tpu_neighbors(mid, grid)
+    # exactly one knob per move: adjacent chips at the same threshold,
+    # adjacent thresholds on the same chip
+    assert {(n.chip.name, n.min_saved_bytes) for n in nbs} == {
+        (chips[0].name, thrs[1]), (chips[2].name, thrs[1]),
+        (chips[1].name, thrs[0]), (chips[1].name, thrs[2])}
+    corner = TpuOption(chips[0], thrs[0])
+    assert len(tpu_neighbors(corner, grid)) == 2
+    # sparse universes stay sparse: undeclared combinations never appear
+    sparse = [TpuOption(chips[0], thrs[0]), TpuOption(chips[1], thrs[1])]
+    assert tpu_neighbors(TpuOption(chips[0], thrs[0]), sparse) == []
+    assert tpu_neighbors(None, grid) == []
+    # ...and the full-point neighborhood emits them as tpu-axis moves
+    from repro.dse import neighborhood
+    space = SweepSpace(workloads=(ARCHS2[0],), tpus=tuple(grid))
+    point = space.points()[4]                      # the mid option
+    moves = neighborhood(point, space)
+    assert {m.tpu for m in moves if m.tpu != point.tpu} == set(nbs)
+
+
+# ------------------------------------------------- adaptive (acceptance)
+def test_adaptive_tpu_matches_exhaustive_with_fewer_points(tpu_engine):
+    """AdaptiveDSE over the TPU space reproduces the exhaustive
+    per-workload Pareto frontier at fewer priced points."""
+    tpus = [TpuOption(TPU_PRESETS[c], t)
+            for c in ("v5e", "v4", "v5p")
+            for t in (8 * KB, 32 * KB, 128 * KB, 512 * KB)]
+    space = SweepSpace(workloads=ARCHS2, tpus=tpus)
+    exhaustive = tpu_engine.run(space)
+    adaptive = AdaptiveDSE(space, engine=tpu_engine).run()
+
+    def ident(rec):
+        return (rec.workload, rec.cache, rec.cim_set)
+
+    assert ({ident(r) for r in adaptive.frontier}
+            == {ident(r) for r in exhaustive.pareto()})
+    assert adaptive.n_priced < len(space)
+    assert adaptive.rounds[-1].stable or adaptive.n_priced == len(space)
+    # refinement rounds reused the warmed analyses: zero builds anywhere
+    assert all(r.stats.get("trace_builds", 0) == 0
+               for r in adaptive.rounds)
+
+
+# ---------------------------------------------------------------- protocol
+def test_default_backend_is_cim():
+    eng = DSEEngine()
+    assert isinstance(eng.backend, CimBackend)
+    (rec,) = eng.run(SweepSpace(workloads=("NB",))).records
+    assert rec.backend == "cim"
+
+
+def test_backends_pickle_roundtrip():
+    """Backends ride to spawned process workers: they must pickle, and
+    equal-by-value copies must behave identically."""
+    for b in (CimBackend(), TpuBackend(), TpuBackend(batch=4, seq_len=16)):
+        clone = pickle.loads(pickle.dumps(b))
+        assert clone == b and clone.name == b.name
+    opt = TpuOption(TPU_PRESETS["v5p"], 64 * KB, vmem_scale=0.25)
+    assert pickle.loads(pickle.dumps(opt)) == opt
+    sel = TpuSelection(1, 2, 3, 4, 5.0)
+    assert pickle.loads(pickle.dumps(sel)) == sel

@@ -1,17 +1,24 @@
 """repro.dse.store: persisted-vs-fresh artifact equality, versioned
-invalidation, corrupted-file recovery, and cross-engine zero-rebuild runs."""
+invalidation, corrupted-file recovery, cross-engine zero-rebuild runs, and
+backend-namespaced coexistence (CiM + TPU artifacts in one cache dir)."""
 import pickle
 
 import pytest
 
 from repro.core import profile_system
 from repro.core.offload import OffloadConfig
-from repro.dse import AnalysisCache, AnalysisStore, DSEEngine, SweepSpace
+from repro.dse import (AnalysisCache, AnalysisStore, DSEEngine, SweepSpace,
+                       TpuBackend, TpuOption)
 from repro.dse.space import CacheOption
 from repro.dse.store import STORE_FORMAT, workload_fingerprint
 
 CACHE = CacheOption.of("32K+256K")
 CFG = OffloadConfig()
+
+# the cheapest TPU-mode sweep: one arch, two fusion thresholds
+TPU_SPACE = SweepSpace(workloads=("xlstm-125m",),
+                       tpus=(TpuOption.of("v5e"),
+                             TpuOption(TpuOption.of("v5e").chip, 1 << 18)))
 
 
 # ----------------------------------------------------------------- keys
@@ -162,3 +169,60 @@ def test_two_engines_share_store_zero_rebuilds(tmp_path):
 def test_engine_rejects_cache_plus_store(tmp_path):
     with pytest.raises(ValueError):
         DSEEngine(cache=AnalysisCache(), store=tmp_path)
+
+
+# ------------------------------------------------- backend coexistence
+CIM_SPACE = SweepSpace(workloads=("NB",))
+
+
+def test_two_backends_share_cache_dir_roundtrip(tmp_path):
+    """CiM and TPU artifacts coexist in one store directory: each backend's
+    second (fresh-engine) run does zero analysis work and prices
+    identically, and neither evicts or collides with the other."""
+    cim1 = DSEEngine(store=tmp_path).run(CIM_SPACE)
+    tpu1 = DSEEngine(store=tmp_path, backend=TpuBackend()).run(TPU_SPACE)
+    assert cim1.stats["trace_builds"] == 1
+    assert tpu1.stats["trace_builds"] == 1
+
+    cim2 = DSEEngine(store=tmp_path).run(CIM_SPACE)
+    tpu2 = DSEEngine(store=tmp_path, backend=TpuBackend()).run(TPU_SPACE)
+    assert cim2.stats["trace_builds"] == 0
+    assert tpu2.stats["trace_builds"] == 0
+    assert tpu2.stats["store_l1_hits"] == 1
+    assert [r.energy_improvement for r in cim2] == \
+        [r.energy_improvement for r in cim1]
+    assert [r.energy_improvement for r in tpu2] == \
+        [r.energy_improvement for r in tpu1]
+    assert {r.backend for r in tpu2} == {"tpu"}
+
+
+def test_tpu_version_bump_misses_while_cim_stays_warm(tmp_path, monkeypatch):
+    """Bumping a backend's version stamp must invalidate *that* backend's
+    persisted artifacts and no one else's."""
+    DSEEngine(store=tmp_path).run(CIM_SPACE)
+    DSEEngine(store=tmp_path, backend=TpuBackend()).run(TPU_SPACE)
+
+    import repro.dse.backends as backends_mod
+    monkeypatch.setattr(backends_mod, "TPU_ANALYSIS_VERSION",
+                        backends_mod.TPU_ANALYSIS_VERSION + 1)
+    tpu = DSEEngine(store=tmp_path, backend=TpuBackend()).run(TPU_SPACE)
+    assert tpu.stats["trace_builds"] == 1          # forced re-analysis
+    cim = DSEEngine(store=tmp_path).run(CIM_SPACE)
+    assert cim.stats["trace_builds"] == 0          # untouched, still warm
+
+
+def test_trace_vm_bump_misses_while_tpu_stays_warm(tmp_path):
+    """...and symmetrically: a trace-VM version bump (the CiM stamp, held
+    by the store) rebuilds CiM analyses while TPU artifacts — keyed by the
+    TPU backend's own stamp, not the store's — stay warm."""
+    from repro.core.trace import TRACE_VM_VERSION
+    DSEEngine(store=tmp_path).run(CIM_SPACE)
+    DSEEngine(store=tmp_path, backend=TpuBackend()).run(TPU_SPACE)
+
+    bumped = AnalysisStore(tmp_path, version=TRACE_VM_VERSION + 1)
+    cim = DSEEngine(store=bumped).run(CIM_SPACE)
+    assert cim.stats["trace_builds"] == 1          # unreachable under v+1
+    bumped2 = AnalysisStore(tmp_path, version=TRACE_VM_VERSION + 1)
+    tpu = DSEEngine(store=bumped2, backend=TpuBackend()).run(TPU_SPACE)
+    assert tpu.stats["trace_builds"] == 0
+    assert tpu.stats["store_l1_hits"] == 1
