@@ -1,0 +1,174 @@
+"""BENCH: per-stage analysis throughput over the fig14 workloads.
+
+Seeds the repo's performance trajectory: times every stage of the columnar
+trace -> IDG -> selection -> pricing pipeline (instructions/second each),
+the end-to-end cold fig14-equivalent sweep, and the persisted layer-1
+footprint — and compares against the recorded pre-columnar baseline
+(PR-5 seed, measured on the same class of machine immediately before the
+struct-of-arrays refactor).
+
+    PYTHONPATH=src python -m benchmarks.run --timing-json BENCH_analysis.json
+    PYTHONPATH=src python -m benchmarks.run --timing-json out.json \\
+        --timing-workloads NB          # CI: record-only, smallest workload
+
+The JSON is record-only (no thresholds); CI uploads it as an artifact so
+regressions show up as a trend, not a gate.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import SWEEP_BENCHES, banner
+
+# Pre-refactor reference, measured at the PR-5 seed (object-based trace
+# core) on this repo's CI-class container immediately before the columnar
+# rewrite: the 27-point fig14 cold sweep and the pickled layer-1 artifacts
+# (trace + flow) for the nine sweep workloads under 32K+256K.
+BASELINE = {
+    "fig14_cold_s": 16.22,
+    "layer1_bytes": 11_284_089,
+    "layer1_insts": 171_344,
+}
+
+FIG14_CACHES = ("32K+256K", "64K+256K", "64K+2M")
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(workloads: Optional[Sequence[str]] = None,
+        json_path: Optional[str] = None) -> Dict:
+    from repro.core.offload import OffloadConfig, analyze_trace
+    from repro.core.profiler import profile_system
+    from repro.core.reshape import reshape
+    from repro.core.trace import attach_cache_results, trace_structural
+    from repro.dse import AnalysisStore, DSEEngine, SweepSpace
+    from repro.dse.space import CACHE_PRESETS, CacheOption
+    from repro.workloads import build
+
+    workloads = tuple(workloads or SWEEP_BENCHES)
+    full_set = workloads == tuple(SWEEP_BENCHES)
+    cfg = OffloadConfig()
+
+    stages: Dict[str, Dict] = {}
+    totals = {"n_instructions": 0, "trace_s": 0.0, "replay_s": 0.0,
+              "idg_s": 0.0, "select_s": 0.0, "price_s": 0.0}
+    for name in workloads:
+        fn, args = build(name)
+        trace_structural(fn, *args)          # warm the jit oracles once
+        st, trace_s = _time(lambda: trace_structural(fn, *args))
+        n = st.n_instructions
+        replay_s = 0.0
+        trs = []
+        for cname in FIG14_CACHES:
+            tr, dt = _time(lambda: attach_cache_results(
+                st, CACHE_PRESETS[cname]))
+            replay_s += dt
+            trs.append(tr)
+        an, idg_s = _time(lambda: analyze_trace(trs[0]))
+        (res, rs), select_s = _time(
+            lambda: (lambda r: (r, reshape(trs[0].trace, r)))(an.select(cfg)))
+        rep, price_s = _time(lambda: profile_system(
+            trs[0], offload=res, reshaped=rs))
+        stages[name] = {
+            "n_instructions": n,
+            "trace_s": round(trace_s, 4),
+            "trace_ips": round(n / trace_s),
+            "replay_s_per_geometry": round(replay_s / len(FIG14_CACHES), 4),
+            "idg_s": round(idg_s, 4),
+            "idg_ips": round(n / idg_s) if idg_s else None,
+            "select_s": round(select_s, 4),
+            "select_ips": round(n / select_s) if select_s else None,
+            "price_s": round(price_s, 4),
+            "price_ips": round(n / price_s) if price_s else None,
+            "energy_improvement": round(rep.energy_improvement, 3),
+        }
+        totals["n_instructions"] += n
+        totals["trace_s"] += trace_s
+        totals["replay_s"] += replay_s
+        totals["idg_s"] += idg_s
+        totals["select_s"] += select_s
+        totals["price_s"] += price_s
+    for k in list(totals):
+        if k.endswith("_s"):
+            totals[k] = round(totals[k], 4)
+
+    # ---- end-to-end: cold fig14-equivalent sweep (fresh engine) ---------
+    space = SweepSpace(workloads=workloads, caches=FIG14_CACHES)
+    results, cold_s = _time(lambda: DSEEngine().run(space))
+    cold = {
+        "points": len(results),
+        "wall_s": round(cold_s, 3),
+        "instructions_per_s": round(
+            sum(r.n_instructions for r in results) / cold_s),
+    }
+    if full_set:
+        cold["baseline_wall_s"] = BASELINE["fig14_cold_s"]
+        cold["improvement_x"] = round(BASELINE["fig14_cold_s"] / cold_s, 2)
+
+    # ---- persisted layer-1 footprint (.npz columns + flow) --------------
+    with tempfile.TemporaryDirectory() as tmp:
+        store = AnalysisStore(tmp)
+        option = CacheOption.of("32K+256K")
+        from repro.dse import AnalysisCache
+        cache = AnalysisCache(store=store)
+        for name in workloads:
+            cache.trace_analysis(name, option)
+        usage = store.disk_usage()
+    blob = {
+        "layer1_bytes": usage["store_bytes_layer1"],
+        "bytes_per_instruction": round(
+            usage["store_bytes_layer1"] / max(1, totals["n_instructions"]),
+            1),
+    }
+    if full_set:
+        blob["baseline_bytes"] = BASELINE["layer1_bytes"]
+        blob["shrink_x"] = round(
+            BASELINE["layer1_bytes"] / usage["store_bytes_layer1"], 2)
+
+    doc = {"workloads": list(workloads), "full_fig14_set": full_set,
+           "stages": stages, "totals": totals, "cold_sweep": cold,
+           "layer1_store": blob}
+    if json_path:
+        pathlib.Path(json_path).write_text(json.dumps(doc, indent=1))
+    return doc
+
+
+def main(workloads: Optional[Sequence[str]] = None,
+         json_path: Optional[str] = None):
+    banner("BENCH: columnar analysis pipeline throughput")
+    doc = run(workloads=workloads, json_path=json_path)
+    for name, s in doc["stages"].items():
+        print(f"  {name:8s} n={s['n_instructions']:6d}  "
+              f"trace {s['trace_ips']:>9,}/s  "
+              f"idg {s['idg_ips']:>10,}/s  "
+              f"select {s['select_ips']:>9,}/s  "
+              f"price {s['price_ips']:>10,}/s")
+    cold = doc["cold_sweep"]
+    line = (f"  cold sweep: {cold['points']} points in {cold['wall_s']}s "
+            f"({cold['instructions_per_s']:,} inst/s)")
+    if "improvement_x" in cold:
+        line += (f"  [baseline {cold['baseline_wall_s']}s -> "
+                 f"x{cold['improvement_x']}]")
+    print(line)
+    blob = doc["layer1_store"]
+    line = (f"  layer-1 store: {blob['layer1_bytes']:,} bytes "
+            f"({blob['bytes_per_instruction']} B/inst)")
+    if "shrink_x" in blob:
+        line += (f"  [baseline {blob['baseline_bytes']:,} -> "
+                 f"x{blob['shrink_x']} smaller]")
+    print(line)
+    if json_path:
+        print(f"  [json] {json_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    main(json_path="BENCH_analysis.json")

@@ -19,16 +19,14 @@ def run():
     rows = []
     # [23]-like: single-level 1 MB SPM/cache
     tr = cached_trace("LCS", (SPM_1M,))
-    res = select_candidates(tr.trace, tr.rut, tr.iht,
-                            OffloadConfig(cim_set=CIM_SET_STT,
-                                          cim_levels=("L1",)))
+    res = select_candidates(tr.trace, cfg=OffloadConfig(cim_set=CIM_SET_STT,
+                                                        cim_levels=("L1",)))
     mb = res.macr_breakdown(tr.trace)
     rows.append({"config": "1MB SPM (as [23])", "offload_share": round(mb["macr"], 3),
                  "paper_eva_cim": PAPER_EVA, "paper_[23]": PAPER_23})
     # default hierarchy
     tr2 = cached_trace("LCS")
-    res2 = select_candidates(tr2.trace, tr2.rut, tr2.iht,
-                             OffloadConfig(cim_set=CIM_SET_STT))
+    res2 = select_candidates(tr2.trace, cfg=OffloadConfig(cim_set=CIM_SET_STT))
     mb2 = res2.macr_breakdown(tr2.trace)
     rows.append({"config": "32K L1 + 256K L2", "offload_share": round(mb2["macr"], 3),
                  "paper_eva_cim": PAPER_EVA, "paper_[23]": PAPER_23})

@@ -11,7 +11,7 @@ def run():
     rows = []
     for name in WORKLOADS:
         tr = cached_trace(name)
-        res = select_candidates(tr.trace, tr.rut, tr.iht, OffloadConfig())
+        res = select_candidates(tr.trace, cfg=OffloadConfig())
         mb = res.macr_breakdown(tr.trace)
         rows.append({"benchmark": name, "macr": round(mb["macr"], 4),
                      "l1_share": round(mb["l1"], 4),

@@ -3,16 +3,24 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table6     # one artifact
     PYTHONPATH=src python -m benchmarks.run --list     # enumerate artifacts
+
+    # per-stage analysis throughput (trace/IDG/selection/pricing), written
+    # as record-only JSON; --timing-workloads restricts to a subset (CI
+    # runs the smallest workload only):
+    PYTHONPATH=src python -m benchmarks.run --timing-json BENCH_analysis.json
+    PYTHONPATH=src python -m benchmarks.run --timing-json out.json \\
+        --timing-workloads NB
 """
 from __future__ import annotations
 
 import sys
 import time
 
-from benchmarks import (fig12_macr_validation, fig13_macr, fig14_cache_cfg,
-                        fig15_levels, fig16_tech, fig17_host, fig_adaptive,
-                        fig_tpu_dse, roofline, table3_energy,
-                        table5_validation, table6_speedup, tpu_macr)
+from benchmarks import (analysis_timing, fig12_macr_validation, fig13_macr,
+                        fig14_cache_cfg, fig15_levels, fig16_tech,
+                        fig17_host, fig_adaptive, fig_tpu_dse, roofline,
+                        table3_energy, table5_validation, table6_speedup,
+                        tpu_macr)
 
 ALL = {
     "table3": table3_energy,
@@ -37,7 +45,30 @@ def main(argv=None) -> int:
         for name, mod in ALL.items():
             doc = next(iter((mod.__doc__ or "").strip().splitlines()), "")
             print(f"{name:10s} {doc}")
+        print(f"{'--timing-json PATH':18s} "
+              f"{(analysis_timing.__doc__ or '').strip().splitlines()[0]}")
         return 0
+    if "--timing-json" in argv:
+        argv = list(argv)
+
+        def take_value(flag: str):
+            i = argv.index(flag)
+            if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+                print(f"{flag} requires a value "
+                      f"(e.g. {flag} BENCH_analysis.json)")
+                raise SystemExit(2)
+            value = argv[i + 1]
+            del argv[i:i + 2]
+            return value
+
+        json_path = take_value("--timing-json")
+        workloads = None
+        if "--timing-workloads" in argv:
+            workloads = tuple(take_value("--timing-workloads").split(","))
+        analysis_timing.main(workloads=workloads, json_path=json_path)
+        if not argv:                       # timing only, no named artifacts
+            return 0
+        # fall through: any remaining names run as usual after the timing
     picks = argv or list(ALL)
     t0 = time.time()
     for name in picks:

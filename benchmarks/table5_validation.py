@@ -15,8 +15,7 @@ from benchmarks.common import banner, cached_trace, emit
 
 def run():
     tr = cached_trace("LCS")
-    res = select_candidates(tr.trace, tr.rut, tr.iht,
-                            OffloadConfig(cim_set=CIM_SET_STT))
+    res = select_candidates(tr.trace, cfg=OffloadConfig(cim_set=CIM_SET_STT))
     rs = reshape(tr.trace, res)
     prof = Profiler(tuple(l.cfg for l in tr.cache.levels), tech="sram")
     _, _ = prof.price_baseline(tr.trace)

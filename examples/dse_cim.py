@@ -122,6 +122,7 @@ def main(argv=None) -> int:
         print(f"   store: {st.get('store_l1_hits', 0)} trace hits / "
               f"{st.get('store_l2_hits', 0)} selection hits / "
               f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
+        _print_store_bytes(st)
 
     # the fixed Fig. 14/15/16 slices assume the full grid was priced —
     # an adaptive run skips dominated regions, so go straight to the front
@@ -190,6 +191,24 @@ def main(argv=None) -> int:
     return 0
 
 
+def _print_store_bytes(st: dict) -> None:
+    """Per-layer / per-backend on-disk footprint (AnalysisStore.stats())."""
+    total = st.get("store_bytes_total")
+    if not total:
+        return
+    def mb(n):
+        return f"{n / 1e6:.2f} MB" if n >= 1e5 else f"{n / 1e3:.1f} KB"
+    backends = ", ".join(
+        f"{k.split('store_bytes_')[1]} {mb(v)}"
+        for k, v in sorted(st.items())
+        if k.startswith("store_bytes_")
+        and k not in ("store_bytes_total", "store_bytes_layer1",
+                      "store_bytes_layer2"))
+    print(f"   store size: {mb(total)} on disk "
+          f"(layer1 {mb(st.get('store_bytes_layer1', 0))} / "
+          f"layer2 {mb(st.get('store_bytes_layer2', 0))}; {backends})")
+
+
 def _tpu_main(args) -> int:
     """The TPU-mode half of the CLI: same flags, same flow, TpuBackend."""
     from repro.configs.registry import ARCHS
@@ -229,6 +248,7 @@ def _tpu_main(args) -> int:
     if args.cache_dir:
         print(f"   store: {st.get('store_l1_hits', 0)} analysis hits / "
               f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
+        _print_store_bytes(st)
 
     if not args.adaptive:
         chip0, thr0 = results.records[0].cache, results.records[0].cim_set

@@ -11,9 +11,11 @@ compiled XLA programs — see DESIGN.md S3.
 """
 from repro.core.cache import (CacheConfig, CacheHierarchy, L1_32K, L1_64K,
                               L2_256K, L2_2M, SPM_1M)
+from repro.core.columnar import ColumnarTrace
 from repro.core.device_model import FEFET, SRAM, TECHS, TechModel
 from repro.core.host_model import DEFAULT_HOST, HostModel
-from repro.core.idg import IDGBuilder, IDGNode, build_flow_index
+from repro.core.idg import (FlowIndex, IDGBuilder, IDGNode, build_flow_index,
+                            build_rut_iht)
 from repro.core.isa import (CIM_SET_FULL, CIM_SET_LOGIC, CIM_SET_STT, Inst,
                             Trace)
 from repro.core.offload import (Candidate, OffloadConfig, OffloadResult,
@@ -21,15 +23,19 @@ from repro.core.offload import (Candidate, OffloadConfig, OffloadResult,
                                 select_candidates)
 from repro.core.profiler import Profiler, SystemReport, profile_system
 from repro.core.reshape import ReshapedTrace, reshape
-from repro.core.trace import Machine, TraceResult, trace_program
+from repro.core.trace import (Machine, StructuralTrace, TraceResult,
+                              attach_cache_results, trace_program,
+                              trace_structural)
 
 __all__ = [
     "CacheConfig", "CacheHierarchy", "L1_32K", "L1_64K", "L2_256K", "L2_2M",
-    "SPM_1M", "FEFET", "SRAM", "TECHS", "TechModel", "DEFAULT_HOST",
-    "HostModel", "IDGBuilder", "IDGNode", "build_flow_index", "CIM_SET_FULL",
+    "SPM_1M", "ColumnarTrace", "FEFET", "SRAM", "TECHS", "TechModel",
+    "DEFAULT_HOST", "HostModel", "FlowIndex", "IDGBuilder", "IDGNode",
+    "build_flow_index", "build_rut_iht", "CIM_SET_FULL",
     "CIM_SET_LOGIC", "CIM_SET_STT", "Inst", "Trace", "Candidate",
     "OffloadConfig", "OffloadResult", "TraceAnalysis", "analyze_trace",
     "select_candidates", "Profiler",
     "SystemReport", "profile_system", "ReshapedTrace", "reshape", "Machine",
-    "TraceResult", "trace_program",
+    "StructuralTrace", "TraceResult", "attach_cache_results",
+    "trace_program", "trace_structural",
 ]

@@ -106,7 +106,18 @@ class AccessResult:
 
 
 class CacheHierarchy:
-    """L1 + optional L2 in front of main memory (inclusive, write-allocate)."""
+    """L1 + optional L2 in front of main memory (inclusive, write-allocate).
+
+    Two recording APIs drive the same simulator state:
+
+      * :meth:`access` — one :class:`AccessResult` per call (the original
+        probe-style interface, kept for tests and interactive use);
+      * :meth:`replay` — batched access recording: an entire address
+        stream in one call, returning the four memory-response *columns*
+        (level/hit/bank/mshr codes) the columnar trace stores.  The trace
+        VM emits the structural instruction stream once per workload and
+        replays it here once per cache geometry.
+    """
 
     def __init__(self, levels: Tuple[CacheConfig, ...] = (L1_32K, L2_256K)):
         self.levels = [_Level(c) for c in levels]
@@ -114,35 +125,117 @@ class CacheHierarchy:
         self.mem_writes = 0
 
     # -- probes ----------------------------------------------------------
-    def access(self, addr: int, is_write: bool) -> AccessResult:
+    def _access(self, addr: int, is_write: bool) -> Tuple[int, bool, int, bool]:
+        """One access; returns (service-level index+1 [len+1 => MEM],
+        first-level hit, bank, mshr-merged).  Lean core shared by
+        :meth:`access` and :meth:`replay`."""
         line = addr // LINE
-        service_level = "MEM"
-        first_hit = False
+        levels = self.levels
         mshr_merged = False
-        for i, lv in enumerate(self.levels):
+        service = len(levels) + 1                     # sentinel: DRAM
+        for i, lv in enumerate(levels):
             if lv.lookup(line):
-                service_level = lv.cfg.name
-                first_hit = i == 0
+                service = i + 1
                 break
             mshr_merged = lv.mshr_probe(line) or mshr_merged
         else:
             self.mem_reads += 1                       # line fill from DRAM
 
         # allocate the line in every level above the service point
-        for lv in self.levels:
-            if lv.cfg.name == service_level:
-                break
+        for i in range(min(service - 1, len(levels))):
+            lv = levels[i]
             victim = lv.fill(line)
             if victim is not None:
                 self._writeback(victim, below=lv.cfg.name)
         if is_write:
-            self.levels[0].mark_dirty(line)
+            levels[0].mark_dirty(line)
 
-        bank_level = self.levels[0] if service_level == "L1" else (
-            self.levels[1] if len(self.levels) > 1 and service_level == "L2"
-            else self.levels[-1])
-        return AccessResult(service_level, first_hit, bank_level.bank_of(addr),
-                            mshr_merged, line)
+        bank_level = levels[service - 1] if service <= len(levels) \
+            else levels[-1]
+        return service, service == 1, bank_level.bank_of(addr), mshr_merged
+
+    def access(self, addr: int, is_write: bool) -> AccessResult:
+        service, first_hit, bank, mshr = self._access(addr, is_write)
+        name = (self.levels[service - 1].cfg.name
+                if service <= len(self.levels) else "MEM")
+        return AccessResult(name, first_hit, bank, mshr, addr // LINE)
+
+    def replay(self, addrs, is_writes):
+        """Batched access recording over a whole trace's memory stream.
+
+        ``addrs`` / ``is_writes`` are parallel arrays (one entry per
+        load/store in commit order).  Returns ``(level, hit, bank, mshr)``
+        int8/int8/int16/bool numpy columns using the
+        :data:`repro.core.isa.LEVELS` level codes.  State evolution is
+        identical to calling :meth:`access` element-by-element — the
+        batched form only removes per-access Python/object overhead.
+        """
+        import numpy as np
+        from repro.core.isa import LEVEL_CODE, LEVEL_MEM
+
+        n = len(addrs)
+        level = np.empty(n, np.int8)
+        hit = np.empty(n, np.int8)
+        bank = np.empty(n, np.int16)
+        mshr = np.empty(n, bool)
+        addr_l = addrs.tolist() if hasattr(addrs, "tolist") else list(addrs)
+        wr_l = (is_writes.tolist() if hasattr(is_writes, "tolist")
+                else list(is_writes))
+        access = self._access
+        codes = [LEVEL_CODE[lv.cfg.name] for lv in self.levels] + [LEVEL_MEM]
+        # L1-hit fast path (the overwhelmingly common case), inlined with
+        # the level's internals bound to locals; every miss falls back to
+        # the shared `_access` core, so state evolution stays identical.
+        l1 = self.levels[0]
+        l1_sets = l1.sets
+        l1_nsets = l1.cfg.n_sets
+        l1_banks = l1.cfg.banks
+        l1_code = codes[0]
+        l1_hits = 0
+        for i in range(n):
+            addr = addr_l[i]
+            line = addr // LINE
+            s = l1_sets[line % l1_nsets]
+            if line in s:
+                s.move_to_end(line)
+                l1_hits += 1
+                if wr_l[i]:
+                    s[line] = True               # mark_dirty (line present)
+                level[i] = l1_code
+                hit[i] = True
+                bank[i] = line % l1_banks
+                mshr[i] = False
+                continue
+            l1.hits += l1_hits                   # flush before shared core
+            l1_hits = 0
+            service, first_hit, b, m = access(addr, wr_l[i])
+            level[i] = codes[service - 1] if service - 1 < len(codes) \
+                else LEVEL_MEM
+            hit[i] = first_hit
+            bank[i] = b
+            mshr[i] = m
+        l1.hits += l1_hits
+        return level, hit, bank, mshr
+
+    # -- counter snapshot (store rehydration) -----------------------------
+    def counters(self) -> Dict[str, int]:
+        out = {"mem_reads": self.mem_reads, "mem_writes": self.mem_writes}
+        for lv in self.levels:
+            out[f"{lv.cfg.name}_hits"] = lv.hits
+            out[f"{lv.cfg.name}_misses"] = lv.misses
+            out[f"{lv.cfg.name}_writebacks"] = lv.writebacks
+        return out
+
+    def restore_counters(self, counters: Dict[str, int]) -> None:
+        """Restore hit/miss statistics (the persisted layer-1 .npz keeps
+        counters, not the full LRU set state — nothing downstream of a
+        finished trace reads the sets)."""
+        self.mem_reads = int(counters.get("mem_reads", 0))
+        self.mem_writes = int(counters.get("mem_writes", 0))
+        for lv in self.levels:
+            lv.hits = int(counters.get(f"{lv.cfg.name}_hits", 0))
+            lv.misses = int(counters.get(f"{lv.cfg.name}_misses", 0))
+            lv.writebacks = int(counters.get(f"{lv.cfg.name}_writebacks", 0))
 
     def _writeback(self, line: int, below: str) -> None:
         """Victim from `below` written into the next level (or DRAM)."""

@@ -83,6 +83,42 @@ CIM_OP_CLASS = {
 }
 
 
+# --------------------------------------------------- integer vocabularies
+# The columnar trace core (repro.core.columnar) stores one small integer per
+# I-state field instead of Python strings; these tuples are the shared,
+# stable decode tables.  Codes index the tuples, so ``OPS[code]`` /
+# ``OP_CODE[name]`` round-trip.  Order is append-only: extending a
+# vocabulary must add at the END (persisted .npz artifacts embed the codes;
+# reordering is a TRACE_VM_VERSION bump).
+OPS = (
+    "load", "store", "branch", "agen", "mov",
+    "add", "sub", "mul", "div", "rem", "pow",
+    "max", "min", "cmp", "sel",
+    "and", "or", "xor", "not", "shl", "shr",
+    "abs", "neg", "sign", "floor", "round",
+    "exp", "log", "tanh", "sqrt", "rsqrt", "sigmoid",
+)
+OP_CODE = {name: i for i, name in enumerate(OPS)}
+OP_LOAD = OP_CODE["load"]
+OP_STORE = OP_CODE["store"]
+OP_MOV = OP_CODE["mov"]
+
+UNITS = (U_INT_ALU, U_INT_MUL, U_INT_DIV, U_FP_ALU, U_FP_MUL, U_FP_DIV,
+         U_FP_SPECIAL, U_MEM_RD, U_MEM_WR, U_BRANCH, U_SIMD)
+UNIT_CODE = {name: i for i, name in enumerate(UNITS)}
+
+# cache level served an access (0 = not a memory instruction)
+LEVELS = (None, "L1", "L2", "MEM")
+LEVEL_CODE = {name: i for i, name in enumerate(LEVELS) if name}
+LEVEL_NONE, LEVEL_L1, LEVEL_L2, LEVEL_MEM = 0, 1, 2, 3
+
+DTYPE_TAGS = ("i", "f")
+DTYPE_CODE = {"i": 0, "f": 1}
+
+# immediate-value kinds (float64 storage round-trips through these)
+IMM_INT, IMM_FLOAT, IMM_BOOL = 0, 1, 2
+
+
 class Inst:
     """One committed instruction (I-state record, Table I)."""
 

@@ -10,13 +10,18 @@ MACR (Fig. 13).
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.core.cache import CacheConfig, CacheHierarchy
+from repro.core.columnar import ColumnarTrace
 from repro.core.device_model import (DRAM_ACCESS_PJ, DRAM_LATENCY_CYCLES,
                                      TechModel, TECHS)
 from repro.core.host_model import DEFAULT_HOST, HostModel
-from repro.core.isa import Trace
+from repro.core.isa import (LEVELS, LEVEL_L2, LEVEL_MEM, OP_STORE, UNITS,
+                            Trace)
 from repro.core.offload import OffloadConfig, OffloadResult, select_candidates
 from repro.core.reshape import ReshapedTrace, reshape
 from repro.core.trace import TraceResult
@@ -136,9 +141,59 @@ class Profiler:
             e += DRAM_ACCESS_PJ
         return e
 
+    # -------------------------------------------- vectorized accumulation
+    def _price_host_columns(self, eb: EnergyBreakdown, unit_counts,
+                            mem_counts) -> float:
+        """Shared host-side pricing from per-unit / per-(level, rw) counts.
+
+        ``unit_counts`` is a bincount over functional-unit codes;
+        ``mem_counts`` maps (level code, is_write) -> accesses.  One
+        multiply per distinct (unit | level x r/w) bucket replaces the
+        per-instruction loop — same constants, same totals.
+        """
+        host = self.host
+        n = int(unit_counts.sum())
+        eb.host_pipeline += n * host.pipeline_pj
+        unit_pj = host.unit_pj
+        for code, cnt in enumerate(unit_counts.tolist()):
+            if cnt:
+                eb.host_units += cnt * unit_pj.get(UNITS[code], 15.0)
+        cycles = n * host.base_cpi
+        for (lvl_code, is_wr), cnt in mem_counts.items():
+            level = LEVELS[lvl_code]
+            e = self._access_energy(level, bool(is_wr))
+            if lvl_code == LEVEL_MEM:
+                eb.dram += cnt * DRAM_ACCESS_PJ
+                e -= DRAM_ACCESS_PJ
+                cycles += cnt * host.mem_stall * host.overlap
+            elif lvl_code == LEVEL_L2:
+                cycles += cnt * host.l2_stall * host.overlap
+            key = level if level != "MEM" else "L2" \
+                if "L2" in self.levels else "L1"
+            eb.cache[key] = eb.cache.get(key, 0.0) + cnt * e
+        return cycles
+
+    @staticmethod
+    def _mem_counts(level_col, is_store_col) -> Dict[Tuple[int, int], int]:
+        """(level code, is_write) -> count over the memory instructions."""
+        mem = level_col > 0
+        if not mem.any():
+            return {}
+        combo = level_col[mem].astype(np.int64) * 2 \
+            + is_store_col[mem].astype(np.int64)
+        counts = np.bincount(combo)
+        return {(int(c) // 2, int(c) % 2): int(n)
+                for c, n in enumerate(counts) if n}
+
     # ------------------------------------------------------------ baseline
     def price_baseline(self, trace: Trace) -> Tuple[EnergyBreakdown, float]:
         eb = EnergyBreakdown()
+        if isinstance(trace, ColumnarTrace):
+            unit_counts = np.bincount(trace.unit, minlength=len(UNITS))
+            mem_counts = self._mem_counts(trace.level, trace.op == OP_STORE)
+            cycles = self._price_host_columns(eb, unit_counts, mem_counts)
+            eb.host_static = self.host.static_pj_per_cycle * cycles
+            return eb, cycles
         cycles = 0.0
         for inst in trace:
             eb.host_pipeline += self.host.pipeline_pj
@@ -159,34 +214,50 @@ class Profiler:
     def price_cim(self, trace: Trace, reshaped: ReshapedTrace
                   ) -> Tuple[EnergyBreakdown, float]:
         eb = EnergyBreakdown()
-        cycles = 0.0
-        for seq in reshaped.host_seqs:
-            inst = trace[seq]
-            eb.host_pipeline += self.host.pipeline_pj
-            eb.host_units += self.host.unit_pj.get(inst.unit, 15.0)
-            if inst.is_mem:
-                e = self._access_energy(inst.level, inst.is_store)
-                if inst.level == "MEM":
-                    eb.dram += DRAM_ACCESS_PJ
-                    e -= DRAM_ACCESS_PJ
-                key = inst.level if inst.level != "MEM" else "L2" \
-                    if "L2" in self.levels else "L1"
-                eb.cache[key] = eb.cache.get(key, 0.0) + e
-            cycles += self.host.inst_cycles(inst)
+        if isinstance(trace, ColumnarTrace):
+            hs = np.asarray(reshaped.host_seqs, np.int64)
+            unit_counts = (np.bincount(trace.unit[hs], minlength=len(UNITS))
+                           if len(hs) else np.zeros(len(UNITS), np.int64))
+            mem_counts = (self._mem_counts(trace.level[hs],
+                                           trace.op[hs] == OP_STORE)
+                          if len(hs) else {})
+            cycles = self._price_host_columns(eb, unit_counts, mem_counts)
+        else:
+            cycles = 0.0
+            for seq in reshaped.host_seqs:
+                inst = trace[seq]
+                eb.host_pipeline += self.host.pipeline_pj
+                eb.host_units += self.host.unit_pj.get(inst.unit, 15.0)
+                if inst.is_mem:
+                    e = self._access_energy(inst.level, inst.is_store)
+                    if inst.level == "MEM":
+                        eb.dram += DRAM_ACCESS_PJ
+                        e -= DRAM_ACCESS_PJ
+                    key = inst.level if inst.level != "MEM" else "L2" \
+                        if "L2" in self.levels else "L1"
+                    eb.cache[key] = eb.cache.get(key, 0.0) + e
+                cycles += self.host.inst_cycles(inst)
 
         l1_read_lat = self.tech.latency("read", "L1")
+        # one CiM macro-instruction issued/committed by the host per
+        # candidate; the array pipelines its op sequence back-to-back.
+        # Aggregated: host issue cost per group, array energy/occupancy per
+        # (level, op class) bucket — the counts replace the per-op loop.
+        n_groups = len(reshaped.cim_groups)
+        eb.host_pipeline += n_groups * self.host.pipeline_pj
+        cycles += n_groups * self.host.base_cpi
+        cls_counts: Counter = Counter()
         for grp in reshaped.cim_groups:
-            # one CiM macro-instruction issued/committed by the host per
-            # candidate; the array pipelines its op sequence back-to-back
-            eb.host_pipeline += self.host.pipeline_pj
-            cycles += self.host.base_cpi
-            lvl_cfg = self.levels[grp.level]
             for cls in grp.op_classes:
-                eb.cim[grp.level] = eb.cim.get(grp.level, 0.0) + \
-                    self.tech.energy(cls, lvl_cfg)
-                lat = self.tech.latency(cls, grp.level)
-                cycles += (self.host.cim_occupancy +
-                           self.host.cim_overlap * max(0.0, lat - l1_read_lat))
+                cls_counts[(grp.level, cls)] += 1
+        for (level, cls), cnt in cls_counts.items():
+            lvl_cfg = self.levels[level]
+            eb.cim[level] = eb.cim.get(level, 0.0) + \
+                cnt * self.tech.energy(cls, lvl_cfg)
+            lat = self.tech.latency(cls, level)
+            cycles += cnt * (self.host.cim_occupancy +
+                             self.host.cim_overlap
+                             * max(0.0, lat - l1_read_lat))
 
         for level, n in reshaped.moves.items():          # cross-level writebacks
             cfg = self.levels[level]
@@ -235,7 +306,14 @@ def profile_system(tr: TraceResult,
     """
     trace = tr.trace
     cache_cfgs = tuple(lv.cfg for lv in tr.cache.levels)
-    result = offload or select_candidates(trace, tr.rut, tr.iht, offload_cfg)
+    if offload is not None:
+        result = offload
+    elif isinstance(trace, ColumnarTrace):
+        # columnar traces carry their own derived tables — never force the
+        # legacy RUT/IHT dict views just to pass them through
+        result = select_candidates(trace, cfg=offload_cfg)
+    else:
+        result = select_candidates(trace, tr.rut, tr.iht, offload_cfg)
     reshaped = reshaped or reshape(trace, result)
     prof = Profiler(cache_cfgs, tech=tech, host=host)
     base_eb, base_cycles = prof.price_baseline(trace)

@@ -22,6 +22,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Sequence
 
+import numpy as np
+
+from repro.core.columnar import ColumnarTrace
 from repro.core.isa import Inst, Trace
 from repro.core.offload import Candidate, OffloadResult
 
@@ -50,10 +53,29 @@ class ReshapedTrace:
     def n_cim_ops(self) -> int:
         return sum(len(g.op_classes) for g in self.cim_groups)
 
+    # ``host_seqs`` is most of the trace — a pickled list of Python ints is
+    # ~10x the bytes of the packed array (the persistent layer-2 store and
+    # process-pool transfers both ship these)
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state["host_seqs"] = np.asarray(self.host_seqs, np.int32)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.host_seqs = state["host_seqs"].tolist()
+
 
 def reshape(trace: Trace, result: OffloadResult) -> ReshapedTrace:
     claimed = result.claimed
-    host_seqs = [i.seq for i in trace if i.seq not in claimed]
+    if isinstance(trace, ColumnarTrace):
+        # surviving host instructions without materializing a single row
+        mask = np.ones(len(trace), bool)
+        if claimed:
+            mask[np.fromiter(claimed, np.int64, len(claimed))] = False
+        host_seqs = np.flatnonzero(mask).tolist()
+    else:
+        host_seqs = [i.seq for i in trace if i.seq not in claimed]
     groups: List[CimGroup] = []
     moves: Dict[str, int] = {}
     internal: Dict[str, int] = {}

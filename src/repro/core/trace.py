@@ -34,15 +34,27 @@ import jax.extend.core as jex_core
 import numpy as np
 
 from repro.core.cache import CacheConfig, CacheHierarchy, L1_32K, L2_256K
-from repro.core.isa import (SRC_IMM, SRC_REG, U_BRANCH, Inst, Trace, unit_for)
+from repro.core.columnar import ColumnarBuilder, ColumnarTrace
+from repro.core.isa import (DTYPE_CODE, OP_CODE, OP_LOAD, OP_STORE, SRC_IMM,
+                            SRC_REG, U_BRANCH, UNIT_CODE, Inst, Trace,
+                            unit_for)
 
-# Version of the trace VM's *observable lowering semantics*.  Bump whenever a
-# change alters the committed instruction stream for an unchanged program
-# (new lowering rules, register-allocator or arena-layout changes, cache
-# model fixes...).  The on-disk analysis store (repro.dse.store) keys every
-# persisted artifact by this number, so stale traces from an older VM are
+# Version of the trace VM's *observable lowering semantics or artifact
+# encoding*.  Bump whenever a change alters the committed instruction
+# stream for an unchanged program (new lowering rules, register-allocator
+# or arena-layout changes, cache model fixes...) OR the persisted layer-1
+# representation (v2: columnar .npz columns replaced pickled Inst lists).
+# The on-disk analysis store (repro.dse.store) keys every persisted
+# artifact by this number, so stale traces from an older VM are
 # invalidated instead of silently re-priced.
-TRACE_VM_VERSION = 1
+TRACE_VM_VERSION = 2
+
+# pre-resolved emission codes: op -> (unit code for int, unit code for float)
+_UNIT_CODES = {op: (UNIT_CODE[unit_for(op, False)],
+                    UNIT_CODE[unit_for(op, True)]) for op in OP_CODE}
+_MEM_RD_CODE = UNIT_CODE[unit_for("load", False)]
+_MEM_WR_CODE = UNIT_CODE[unit_for("store", False)]
+_BRANCH_CODE = UNIT_CODE[U_BRANCH]
 
 # ======================================================================
 # Values: concrete data + an address map (None => immediate / generated)
@@ -76,17 +88,33 @@ class TraceLimits:
 
 
 class Machine:
-    """Arena + register file + cache + the emitted CIQ (with RUT/IHT)."""
+    """Arena + register file + the emitted CIQ (columnar).
+
+    The machine emits *structural* columns only — opcode, registers,
+    addresses — one scalar append per field per committed instruction
+    (:class:`~repro.core.columnar.ColumnarBuilder`), never an
+    :class:`~repro.core.isa.Inst` object.  The memory-response fields
+    (level/hit/bank/MSHR) are geometry-dependent and are attached
+    afterwards by replaying the access stream through a
+    :class:`~repro.core.cache.CacheHierarchy`
+    (:func:`attach_cache_results`), which is what lets one structural
+    trace serve every cache configuration of a sweep.  RUT/IHT are no
+    longer built at commit time either: they are derived tables,
+    reconstructed vectorized from the source-operand columns
+    (:func:`repro.core.idg.build_rut_iht`).
+    """
 
     # compiled inner loops carry induction/address-gen + branch overhead;
     # -O2 typically unrolls ~4x, so: one agen per element, one branch per 4.
     UNROLL = 4
 
-    def __init__(self, cache_levels: Tuple[CacheConfig, ...] = (L1_32K, L2_256K),
-                 n_regs: int = 24, limits: TraceLimits = TraceLimits(),
+    def __init__(self, n_regs: int = 24, limits: TraceLimits = TraceLimits(),
                  loop_overhead: bool = True):
-        self.cache = CacheHierarchy(cache_levels)
-        self.trace: Trace = []
+        from repro.core.columnar import MAX_REG_ID
+        if not 1 <= n_regs <= MAX_REG_ID - 1:     # +1 induction register
+            raise ValueError(f"n_regs must be in [1, {MAX_REG_ID - 1}] "
+                             "(columnar dst packing)")
+        self.b = ColumnarBuilder()
         self.limits = limits
         self.loop_overhead = loop_overhead
         self._arena_top = 0x1000
@@ -97,9 +125,6 @@ class Machine:
         self._ov_reg = self._free_regs.pop()            # reserved induction var
         self._reg_of_addr: "OrderedDict[int, int]" = OrderedDict()  # LRU
         self._addr_of_reg: Dict[int, int] = {}
-        # paper's RUT / IHT, built as instructions commit
-        self.rut: Dict[int, List[int]] = {r: [] for r in range(n_regs + 1)}
-        self.iht: Dict[int, List[Tuple[int, int]]] = {}
 
     # ------------------------------------------------------------ arena
     # Loop-scoped buffer reuse: compiled loops keep their temporaries on the
@@ -186,29 +211,20 @@ class Machine:
         return reg
 
     # ----------------------------------------------------------- emission
-    def _commit(self, inst: Inst, srcs_regs: Sequence[int]) -> None:
-        self.trace.append(inst)
-        if len(self.trace) > self.limits.max_instructions:
+    def _check_limit(self) -> None:
+        if self.b.n > self.limits.max_instructions:
             raise RuntimeError(
                 f"trace exceeded {self.limits.max_instructions} instructions; "
                 "shrink the workload size")
-        # IHT: source registers + their position in the RUT at commit time
-        self.iht[inst.seq] = [(r, len(self.rut[r]) - 1) for r in srcs_regs]
-        if inst.dst is not None:
-            self.rut[inst.dst].append(inst.seq)
 
     def emit_load(self, addr: int, tag: str, size: int) -> int:
         hit_reg = self.reg_holding(addr)
         if hit_reg is not None:
             return hit_reg                                # load elided (Fig.4c)
         reg = self._alloc_reg()
-        seq = len(self.trace)
-        inst = Inst(seq, "load", unit_for("load", tag == "f"), tag, reg,
-                    ((SRC_IMM, addr),), addr=addr, size=size)
-        res = self.cache.access(addr, is_write=False)
-        inst.level, inst.hit, inst.bank, inst.mshr = (
-            res.level, res.hit, res.bank, res.mshr)
-        self._commit(inst, ())
+        self.b.add(OP_LOAD, _MEM_RD_CODE, tag == "f", reg, addr, size,
+                   ((SRC_IMM, addr),))
+        self._check_limit()
         self._bind(addr, reg)
         return reg
 
@@ -220,34 +236,30 @@ class Machine:
             old = self._addr_of_reg.pop(dst, None)
             if old is not None:
                 self._reg_of_addr.pop(old, None)
-        seq = len(self.trace)
-        inst = Inst(seq, op, unit_for(op, tag == "f"), tag, reg, tuple(srcs))
-        self._commit(inst, [v for t, v in srcs if t == SRC_REG])
+        is_f = tag == "f"
+        self.b.add(OP_CODE[op], _UNIT_CODES[op][is_f], is_f, reg, -1, 4,
+                   tuple(srcs))
+        self._check_limit()
         return reg
 
     def emit_store(self, addr: int, reg: int, tag: str, size: int) -> None:
-        seq = len(self.trace)
-        inst = Inst(seq, "store", unit_for("store", tag == "f"), tag, None,
-                    ((SRC_REG, reg),), addr=addr, size=size)
-        res = self.cache.access(addr, is_write=True)
-        inst.level, inst.hit, inst.bank, inst.mshr = (
-            res.level, res.hit, res.bank, res.mshr)
-        self._commit(inst, (reg,))
+        self.b.add(OP_STORE, _MEM_WR_CODE, tag == "f", -1, addr, size,
+                   ((SRC_REG, reg),))
+        self._check_limit()
         self._bind(addr, reg)                            # value is in reg + mem
 
     def emit_branch(self) -> None:
-        seq = len(self.trace)
-        inst = Inst(seq, "branch", U_BRANCH, "i", None, ())
-        self._commit(inst, ())
+        self.b.add(OP_CODE["branch"], _BRANCH_CODE, False, -1, -1, 4, ())
+        self._check_limit()
 
     def emit_loop_overhead(self) -> None:
         """Per-element induction/addr-gen + amortized loop branch (UNROLL)."""
         if not self.loop_overhead:
             return
-        seq = len(self.trace)
-        inst = Inst(seq, "agen", unit_for("agen", False), "i", self._ov_reg,
-                    ((SRC_REG, self._ov_reg), (SRC_IMM, 4)))
-        self._commit(inst, (self._ov_reg,))
+        ov = self._ov_reg
+        self.b.add(OP_CODE["agen"], _UNIT_CODES["agen"][False], False, ov,
+                   -1, 4, ((SRC_REG, ov), (SRC_IMM, 4)))
+        self._check_limit()
         self._ov_count += 1
         if self._ov_count % self.UNROLL == 0:
             self.emit_branch()
@@ -371,26 +383,29 @@ class TraceInterpreter:
         tag = _dtype_tag(out_data.dtype)
         osize = _itemsize(out_data.dtype)
         n = out_data.size
-        # broadcast source addr/data maps to the output shape
+        # broadcast source addr/data maps to the output shape; plain-list
+        # mirrors make the per-element emission loop scalar-cheap
         srcs_flat = []
         for v in invals:
             data = np.broadcast_to(np.asarray(v.data), out_data.shape)
-            addr = (np.broadcast_to(v.addr, out_data.shape).ravel()
+            addr = (np.broadcast_to(v.addr, out_data.shape).ravel().tolist()
                     if v.addr is not None else None)
-            srcs_flat.append((data.ravel(), addr,
+            srcs_flat.append((data.ravel().tolist(), addr,
                               _dtype_tag(np.asarray(v.data).dtype),
                               _itemsize(np.asarray(v.data).dtype)))
-        oaddr_flat = out_addr.ravel()
+        oaddr_flat = out_addr.ravel().tolist()
+        emit_overhead = m.emit_loop_overhead
+        emit_load, emit_op, emit_store = m.emit_load, m.emit_op, m.emit_store
         for i in range(n):
-            m.emit_loop_overhead()
+            emit_overhead()
             srcs = []
             for data, addr, stag, ssize in srcs_flat:
                 if addr is None:
-                    srcs.append((SRC_IMM, data[i].item()))
+                    srcs.append((SRC_IMM, data[i]))
                 else:
-                    srcs.append((SRC_REG, m.emit_load(int(addr[i]), stag, ssize)))
-            rd = m.emit_op(op, tag, srcs)
-            m.emit_store(int(oaddr_flat[i]), rd, tag, osize)
+                    srcs.append((SRC_REG, emit_load(addr[i], stag, ssize)))
+            rd = emit_op(op, tag, srcs)
+            emit_store(oaddr_flat[i], rd, tag, osize)
         return Value(out_data, out_addr)
 
     # ----------------------------------------------------------- reduction
@@ -406,21 +421,26 @@ class TraceInterpreter:
         keep = [a for a in range(x.ndim) if a not in axes]
         perm = keep + list(axes)
         red_n = int(np.prod([x.shape[a] for a in axes])) if axes else 1
-        xa = (np.transpose(inval.addr, perm).reshape(-1, red_n)
+        xa = (np.transpose(inval.addr, perm).reshape(-1, red_n).tolist()
               if inval.addr is not None else None)
         xd = np.transpose(x, perm).reshape(-1, red_n)
+        xd_l = xd.tolist()
         out_addr = m.alloc(out_data.shape, out_data.dtype)
-        oaddr_flat = out_addr.ravel()
+        oaddr_flat = out_addr.ravel().tolist()
+        emit_overhead = m.emit_loop_overhead
+        emit_load, emit_op, emit_store = m.emit_load, m.emit_op, m.emit_store
         for i in range(xd.shape[0]):
-            acc = m.emit_op("mov", tag, ((SRC_IMM, init_imm),))
+            acc = emit_op("mov", tag, ((SRC_IMM, init_imm),))
+            row_a = xa[i] if xa is not None else None
+            row_d = xd_l[i]
             for j in range(red_n):
-                m.emit_loop_overhead()
-                if xa is None:
-                    src = (SRC_IMM, xd[i, j].item())
+                emit_overhead()
+                if row_a is None:
+                    src = (SRC_IMM, row_d[j])
                 else:
-                    src = (SRC_REG, m.emit_load(int(xa[i, j]), tag, ssize))
-                acc = m.emit_op(op, tag, ((SRC_REG, acc), src), dst=acc)
-            m.emit_store(int(oaddr_flat[i]), acc, tag, osize)
+                    src = (SRC_REG, emit_load(row_a[j], tag, ssize))
+                acc = emit_op(op, tag, ((SRC_REG, acc), src), dst=acc)
+            emit_store(oaddr_flat[i], acc, tag, osize)
         return Value(out_data, out_addr)
 
     def _argreduce(self, cmp_np, inval: Value, axis: int, out_data: np.ndarray
@@ -485,20 +505,31 @@ class TraceInterpreter:
         tag = _dtype_tag(out_data.dtype)
         asz, bsz = _itemsize(A.dtype), _itemsize(B.dtype)
         osize = _itemsize(out_data.dtype)
+        Ad_l, Bd_l = Ad.tolist(), Bd.tolist()
+        Aa_l = Aa.tolist() if Aa is not None else None
+        Ba_l = Ba.tolist() if Ba is not None else None
+        oaddr_l = oaddr.tolist()
+        emit_overhead = m.emit_loop_overhead
+        emit_load, emit_op, emit_store = m.emit_load, m.emit_op, m.emit_store
         for bi in range(nb):
             for i in range(Mm):
+                a_row = Aa_l[bi][i] if Aa_l is not None else None
+                ad_row = Ad_l[bi][i]
                 for j in range(Nn):
-                    acc = m.emit_op("mov", tag, ((SRC_IMM, 0),))
+                    b_row = Ba_l[bi][j] if Ba_l is not None else None
+                    bd_row = Bd_l[bi][j]
+                    acc = emit_op("mov", tag, ((SRC_IMM, 0),))
                     for k in range(K):
-                        m.emit_loop_overhead()
-                        sa = ((SRC_REG, m.emit_load(int(Aa[bi, i, k]), tag, asz))
-                              if Aa is not None else (SRC_IMM, Ad[bi, i, k].item()))
-                        sb = ((SRC_REG, m.emit_load(int(Ba[bi, j, k]), tag, bsz))
-                              if Ba is not None else (SRC_IMM, Bd[bi, j, k].item()))
-                        prod = m.emit_op("mul", tag, (sa, sb))
-                        acc = m.emit_op("add", tag, ((SRC_REG, acc), (SRC_REG, prod)),
-                                        dst=acc)
-                    m.emit_store(int(oaddr[bi, i, j]), acc, tag, osize)
+                        emit_overhead()
+                        sa = ((SRC_REG, emit_load(a_row[k], tag, asz))
+                              if a_row is not None else (SRC_IMM, ad_row[k]))
+                        sb = ((SRC_REG, emit_load(b_row[k], tag, bsz))
+                              if b_row is not None else (SRC_IMM, bd_row[k]))
+                        prod = emit_op("mul", tag, (sa, sb))
+                        acc = emit_op("add", tag,
+                                      ((SRC_REG, acc), (SRC_REG, prod)),
+                                      dst=acc)
+                    emit_store(oaddr_l[bi][i][j], acc, tag, osize)
         return Value(out_data, out_addr)
 
     # ------------------------------------------------------- copy helpers
@@ -633,10 +664,19 @@ class TraceInterpreter:
 
         # ---- select / clamp ----------------------------------------------
         if prim == "select_n":
+            # pure element selection — numpy is bit-exact with XLA here, and
+            # skipping the per-eqn dispatch matters inside scan/while bodies
             pred, *cases = invals
-            out = np.asarray(jax.lax.select_n(
-                np.asarray(pred.data), *[np.asarray(c.data) for c in cases]))
-            return [self._elementwise("sel", [pred] + list(cases), out)]
+            pd = np.asarray(pred.data)
+            cds = [np.asarray(c.data) for c in cases]
+            if pd.dtype == bool and len(cds) == 2:
+                out = np.where(pd, cds[1], cds[0])
+            elif len(cds) < 32:                    # np.choose's arity limit
+                out = np.choose(pd.astype(np.int64), cds)
+            else:
+                out = jax.lax.select_n(pd, *cds)
+            return [self._elementwise("sel", [pred] + list(cases),
+                                      np.asarray(out))]
         if prim == "clamp":
             lo, x, hi = invals
             out = np.clip(np.asarray(x.data), np.asarray(lo.data),
@@ -847,8 +887,6 @@ class TraceInterpreter:
         od = np.asarray(operand.data)
         idx = np.asarray(indices.data)
         ud = np.asarray(updates.data)
-        res = np.asarray((jax.lax.scatter_add if is_add else jax.lax.scatter)(
-            od, idx, ud, dnums, mode=jax.lax.GatherScatterMode.CLIP))
         base = operand if operand.addr is not None else self.m.materialize(operand)
         # destination flat ids via a marker scatter (x64-safe int32 trick);
         # duplicate destinations keep the last writer — pricing approximation.
@@ -860,6 +898,17 @@ class TraceInterpreter:
         mk = marker.ravel()
         sel = mk >= 0
         dest_flat[mk[sel]] = np.nonzero(sel)[0]
+        if is_add:
+            res = np.asarray(jax.lax.scatter_add(
+                od, idx, ud, dnums, mode=jax.lax.GatherScatterMode.CLIP))
+        else:
+            # plain scatter: the marker already resolved the written cells
+            # (and their last writer), so the result is one fancy-index
+            # assignment — element movement only, bit-exact with the lax
+            # scatter the marker came from
+            res = od.copy()
+            res.ravel()[np.nonzero(sel)[0]] = ud.ravel()[mk[sel]]
+            res = np.asarray(res)
         m = self.m
         tag = _dtype_tag(ud.dtype)
         size = _itemsize(ud.dtype)
@@ -964,19 +1013,90 @@ class TraceInterpreter:
 # Public API
 # ======================================================================
 @dataclasses.dataclass
-class TraceResult:
-    trace: Trace
-    rut: Dict[int, List[int]]
-    iht: Dict[int, List[Tuple[int, int]]]
-    cache: CacheHierarchy
+class StructuralTrace:
+    """Geometry-independent half of a traced program: the structural
+    columns plus the interpreter's concrete outputs.  One of these is
+    built per workload; :func:`attach_cache_results` replays its memory
+    stream through a cache hierarchy to produce the (much cheaper)
+    per-geometry :class:`TraceResult`."""
+    columns: ColumnarTrace
     outputs: List[np.ndarray]
+
+    @property
+    def n_instructions(self) -> int:
+        return len(self.columns)
+
+
+class TraceResult:
+    """One traced (program, cache geometry) pair: the columnar CIQ with
+    memory-response columns filled, the replayed cache hierarchy (for its
+    statistics), and the program outputs.  ``rut`` / ``iht`` are derived
+    views, reconstructed vectorized on first access."""
+
+    __slots__ = ("trace", "cache", "outputs", "structural")
+
+    def __init__(self, trace: ColumnarTrace, cache: CacheHierarchy,
+                 outputs: List[np.ndarray],
+                 structural: Optional[StructuralTrace] = None):
+        self.trace = trace
+        self.cache = cache
+        self.outputs = outputs
+        self.structural = structural
+
+    @property
+    def rut(self) -> Dict[int, List[int]]:
+        return self.trace.rut
+
+    @property
+    def iht(self) -> Dict[int, List[Tuple[int, int]]]:
+        return self.trace.iht
 
     @property
     def n_instructions(self) -> int:
         return len(self.trace)
 
     def mem_accesses(self) -> int:
-        return sum(1 for i in self.trace if i.is_mem)
+        return self.trace.mem_accesses()
+
+
+def trace_structural(fn: Callable, *args, n_regs: int = 24,
+                     limits: TraceLimits = TraceLimits()) -> StructuralTrace:
+    """Lower ``fn(*args)`` to the structural instruction columns (no cache
+    model involved — the stream is identical under every geometry)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    machine = Machine(n_regs=n_regs, limits=limits)
+    interp = TraceInterpreter(machine)
+    arg_vals = [machine.store_const(np.asarray(a))
+                for a in jax.tree_util.tree_leaves(args)]
+    outs = interp.run(closed.jaxpr, closed.consts, arg_vals)
+    return StructuralTrace(machine.b.finish(machine.n_regs),
+                           [np.asarray(v.data) for v in outs])
+
+
+def attach_cache_results(st: StructuralTrace,
+                         cache_levels: Tuple[CacheConfig, ...] = (L1_32K,
+                                                                  L2_256K)
+                         ) -> TraceResult:
+    """Replay the structural trace's memory stream through a fresh cache
+    hierarchy, producing the per-geometry level/hit/bank/MSHR columns —
+    byte-identical to recording the accesses at emission time, at a
+    fraction of the cost of re-interpreting the program."""
+    ct = st.columns
+    hier = CacheHierarchy(cache_levels)
+    mem_idx = np.flatnonzero(ct.mem_mask)
+    lvl, hit, bank, mshr = hier.replay(ct.addr[mem_idx],
+                                       ct.op[mem_idx] == OP_STORE)
+    level_col = np.zeros(ct.n, np.int8)
+    hit_col = np.full(ct.n, -1, np.int8)
+    bank_col = np.full(ct.n, -1, np.int16)
+    mshr_col = np.zeros(ct.n, bool)
+    level_col[mem_idx] = lvl
+    hit_col[mem_idx] = hit
+    bank_col[mem_idx] = bank
+    mshr_col[mem_idx] = mshr
+    return TraceResult(ct.with_mem_results(level_col, hit_col, bank_col,
+                                           mshr_col),
+                       hier, st.outputs, structural=st)
 
 
 def trace_program(fn: Callable, *args,
@@ -989,10 +1109,6 @@ def trace_program(fn: Callable, *args,
     data loaded before the region of interest); jaxpr literals and iota
     lower to immediates.
     """
-    closed = jax.make_jaxpr(fn)(*args)
-    machine = Machine(cache_levels=cache_levels, n_regs=n_regs, limits=limits)
-    interp = TraceInterpreter(machine)
-    arg_vals = [machine.store_const(np.asarray(a)) for a in jax.tree_util.tree_leaves(args)]
-    outs = interp.run(closed.jaxpr, closed.consts, arg_vals)
-    return TraceResult(machine.trace, machine.rut, machine.iht, machine.cache,
-                       [np.asarray(v.data) for v in outs])
+    return attach_cache_results(trace_structural(fn, *args, n_regs=n_regs,
+                                                 limits=limits),
+                                cache_levels)

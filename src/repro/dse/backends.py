@@ -118,7 +118,12 @@ class CimBackend(AnalysisBackend):
     logic (including the persistent-store integration and its version
     stamps, ``TRACE_VM_VERSION`` / ``ANALYSIS_VERSION``) stays in
     :class:`~repro.dse.engine.AnalysisCache`, so records, counters, and
-    fig14–17 artifacts are identical to the pre-backend engine.
+    fig14–17 artifacts are identical to the pre-backend engine.  The
+    layer-1 artifact is a columnar
+    :class:`~repro.core.trace.TraceResult`: ``analyze`` per (workload,
+    geometry) costs one access-stream replay after the first geometry
+    (the structural interpretation is shared), and ``price`` is a
+    vectorized column scan.
     """
 
     name = "cim"

@@ -1,19 +1,26 @@
 """Sweep executor: memoized trace analysis + fanned-out per-config pricing.
 
-The Eva-CiM pipeline splits cleanly into two phases with very different
-costs and very different dependence on the swept axes:
+The Eva-CiM pipeline splits cleanly into phases with very different
+costs and very different dependence on the swept axes (timings: columnar
+core, mid-size Table-IV workload):
 
   ========================  =====================  ========================
   phase                     depends on             cost
   ========================  =====================  ========================
-  trace + IDG/flow index    workload, cache geom   seconds (trace VM)
-  candidate selection       + cim_levels/cim_set   ~100 ms (Algorithm 1)
-  pricing (energy/cycles)   + tech, host           ~100 ms (linear scan)
+  structural trace          workload only          ~100 ms (trace VM, once)
+  cache replay + flow       + cache geometry       ~20 ms each (columns)
+  candidate selection       + cim_levels/cim_set   partition ~100 ms once,
+                                                   placement ~ms per config
+  pricing (energy/cycles)   + tech, host           ~ms (np.bincount)
   ========================  =====================  ========================
 
-:class:`AnalysisCache` memoizes the first two layers by their exact
-dependence keys, so a Fig. 16 technology sweep re-runs *nothing* but
-pricing, and a Fig. 15 level sweep re-runs selection only.  Backing the
+:class:`AnalysisCache` memoizes the layers by their exact dependence
+keys — including a per-*workload* structural-trace memo above layer 1, so
+a Fig. 14 geometry sweep interprets each program once and only replays
+its access stream per geometry — a Fig. 16 technology sweep re-runs
+*nothing* but pricing, and a Fig. 15 level sweep re-runs placement only
+(the structural candidate partition is shared through the columnar
+trace's memo; see :mod:`repro.core.offload`).  Backing the
 cache with a persistent :class:`~repro.dse.store.AnalysisStore`
 (``AnalysisCache(store=...)`` / ``DSEEngine(store=...)``) extends both
 memo layers across *processes*: repeated CLI sweeps and spawned
@@ -50,7 +57,8 @@ from repro.core.host_model import DEFAULT_HOST, HostModel
 from repro.core.offload import (OffloadConfig, OffloadResult, TraceAnalysis,
                                 analyze_trace, rehydrate_analysis)
 from repro.core.reshape import ReshapedTrace, reshape
-from repro.core.trace import TraceResult, trace_program
+from repro.core.trace import (StructuralTrace, TraceResult,
+                              attach_cache_results, trace_structural)
 from repro.dse.backends import AnalysisBackend, CimBackend
 from repro.dse.results import SweepRecord, SweepResults
 from repro.dse.space import CacheOption, SweepPoint, SweepSpace
@@ -78,6 +86,7 @@ class AnalysisCache:
         if store is not None and not isinstance(store, AnalysisStore):
             store = AnalysisStore(store)
         self.store = store
+        self._structural: Dict[str, StructuralTrace] = {}
         self._traces: Dict[Tuple, TraceResult] = {}
         self._analyses: Dict[Tuple, TraceAnalysis] = {}
         self._offloads: Dict[Tuple, Tuple[OffloadResult, ReshapedTrace]] = {}
@@ -97,34 +106,71 @@ class AnalysisCache:
                 lk = self._key_locks[key] = threading.Lock()
             return lk
 
+    def _prune_lock(self, key: Tuple) -> None:
+        """Release a build lock's table entry once its layer completed.
+
+        The lock exists to serialize the *first* build of a key; after the
+        artifact is memoized every later lookup is a plain memo hit, so
+        keeping one ``threading.Lock`` per (workload, cache, offload) key
+        alive forever only leaks memory across long adaptive runs.
+        Threads already blocked on the popped lock still hold a reference
+        and proceed normally — they just find the memo populated."""
+        with self._lock:
+            self._key_locks.pop(key, None)
+
     # ------------------------------------------------------------ layer 1
-    def trace(self, workload: str, cache: CacheOption) -> TraceResult:
+    def _structural_trace(self, workload: str) -> StructuralTrace:
+        """The geometry-independent trace, interpreted once per workload —
+        every cache geometry of a sweep replays its access stream instead
+        of re-running the trace VM."""
         from repro.workloads import build          # late: keep core importable
+        skey = ("structural", workload)
+        with self._key_lock(skey):
+            try:
+                with self._lock:
+                    st = self._structural.get(workload)
+                if st is None:
+                    fn, args = build(workload)
+                    st = trace_structural(fn, *args)
+                    with self._lock:
+                        self._structural[workload] = st
+                return st
+            finally:
+                self._prune_lock(skey)
+
+    def trace(self, workload: str, cache: CacheOption) -> TraceResult:
         key = (workload, cache.levels)             # full geometry, not name
         with self._key_lock(key):
-            with self._lock:
-                hit = self._traces.get(key)
-                if hit is not None:
-                    self.trace_hits += 1
-                    return hit
-            if self.store is not None:
-                loaded = self.store.load_layer1(workload, cache.levels)
-                if loaded is not None:
-                    tr, flow = loaded
-                    with self._lock:
-                        self._traces[key] = tr
-                        if flow is not None and key not in self._analyses:
-                            self._analyses[key] = rehydrate_analysis(tr, flow)
-                    return tr
-            with self._lock:
-                self.trace_builds += 1
-            fn, args = build(workload)
-            tr = trace_program(fn, *args, cache_levels=cache.levels)
-            with self._lock:
-                self._traces[key] = tr
-            if self.store is not None:
-                self.store.save_layer1(workload, cache.levels, tr)
-            return tr
+            try:
+                with self._lock:
+                    hit = self._traces.get(key)
+                    if hit is not None:
+                        self.trace_hits += 1
+                        return hit
+                if self.store is not None:
+                    loaded = self.store.load_layer1(workload, cache.levels)
+                    if loaded is not None:
+                        tr, flow = loaded
+                        with self._lock:
+                            self._traces[key] = tr
+                            if tr.structural is not None \
+                                    and workload not in self._structural:
+                                self._structural[workload] = tr.structural
+                            if flow is not None and key not in self._analyses:
+                                self._analyses[key] = rehydrate_analysis(tr,
+                                                                         flow)
+                        return tr
+                with self._lock:
+                    self.trace_builds += 1
+                tr = attach_cache_results(self._structural_trace(workload),
+                                          cache.levels)
+                with self._lock:
+                    self._traces[key] = tr
+                if self.store is not None:
+                    self.store.save_layer1(workload, cache.levels, tr)
+                return tr
+            finally:
+                self._prune_lock(key)
 
     def trace_analysis(self, workload: str, cache: CacheOption
                        ) -> TraceAnalysis:
@@ -132,23 +178,26 @@ class AnalysisCache:
         callers that only need the raw trace never pay for the flow index."""
         key = (workload, cache.levels)
         with self._key_lock(("analysis",) + key):
-            with self._lock:
-                hit = self._analyses.get(key)
-            if hit is not None:
-                return hit
-            tr = self.trace(workload, cache)
-            with self._lock:               # a store hit may have rehydrated it
-                hit = self._analyses.get(key)
-            if hit is not None:
-                return hit
-            analysis = analyze_trace(tr)
-            with self._lock:
-                self._analyses[key] = analysis
-            if self.store is not None:
-                # upgrade the layer-1 artifact in place: trace + flow tables
-                self.store.save_layer1(workload, cache.levels, tr,
-                                       flow=analysis.flow)
-            return analysis
+            try:
+                with self._lock:
+                    hit = self._analyses.get(key)
+                if hit is not None:
+                    return hit
+                tr = self.trace(workload, cache)
+                with self._lock:           # a store hit may have rehydrated it
+                    hit = self._analyses.get(key)
+                if hit is not None:
+                    return hit
+                analysis = analyze_trace(tr)
+                with self._lock:
+                    self._analyses[key] = analysis
+                if self.store is not None:
+                    # upgrade the layer-1 artifact in place: trace + flow
+                    self.store.save_layer1(workload, cache.levels, tr,
+                                           flow=analysis.flow)
+                return analysis
+            finally:
+                self._prune_lock(("analysis",) + key)
 
     # ------------------------------------------------------------ layer 2
     def offload(self, workload: str, cache: CacheOption,
@@ -157,28 +206,32 @@ class AnalysisCache:
         # keeps the key complete if new knobs are ever added to it
         key = (workload, cache.levels, cfg)
         with self._key_lock(key):
-            with self._lock:
-                hit = self._offloads.get(key)
-                if hit is not None:
-                    self.offload_hits += 1
-                    return hit
-            if self.store is not None:
-                loaded = self.store.load_layer2(workload, cache.levels, cfg)
-                if loaded is not None:
-                    with self._lock:
-                        self._offloads[key] = loaded
-                    return loaded
-            with self._lock:
-                self.offload_builds += 1
-            analysis = self.trace_analysis(workload, cache)
-            result = analysis.select(cfg)
-            reshaped = reshape(analysis.trace, result)
-            with self._lock:
-                self._offloads[key] = (result, reshaped)
-            if self.store is not None:
-                self.store.save_layer2(workload, cache.levels, cfg,
-                                       result, reshaped)
-            return result, reshaped
+            try:
+                with self._lock:
+                    hit = self._offloads.get(key)
+                    if hit is not None:
+                        self.offload_hits += 1
+                        return hit
+                if self.store is not None:
+                    loaded = self.store.load_layer2(workload, cache.levels,
+                                                    cfg)
+                    if loaded is not None:
+                        with self._lock:
+                            self._offloads[key] = loaded
+                        return loaded
+                with self._lock:
+                    self.offload_builds += 1
+                analysis = self.trace_analysis(workload, cache)
+                result = analysis.select(cfg)
+                reshaped = reshape(analysis.trace, result)
+                with self._lock:
+                    self._offloads[key] = (result, reshaped)
+                if self.store is not None:
+                    self.store.save_layer2(workload, cache.levels, cfg,
+                                           result, reshaped)
+                return result, reshaped
+            finally:
+                self._prune_lock(key)
 
     # ---------------------------------------------------- generic artifacts
     def artifact(self, layer: int, key: Tuple, build: Callable[[], Any],
@@ -200,25 +253,29 @@ class AnalysisCache:
                         else ("offload_builds", "offload_hits"))
         full_key = (layer,) + key
         with self._key_lock(("blob",) + full_key):
-            with self._lock:
-                if full_key in self._blobs:
-                    setattr(self, hits, getattr(self, hits) + 1)
-                    return self._blobs[full_key]
-            if self.store is not None and store_spec is not None:
-                payload = self.store.load_blob(layer, store_spec)
-                if payload is not None:
-                    value = payload["artifact"]
-                    with self._lock:
-                        self._blobs[full_key] = value
-                    return value
-            with self._lock:
-                setattr(self, builds, getattr(self, builds) + 1)
-            value = build()
-            with self._lock:
-                self._blobs[full_key] = value
-            if self.store is not None and store_spec is not None:
-                self.store.save_blob(layer, store_spec, {"artifact": value})
-            return value
+            try:
+                with self._lock:
+                    if full_key in self._blobs:
+                        setattr(self, hits, getattr(self, hits) + 1)
+                        return self._blobs[full_key]
+                if self.store is not None and store_spec is not None:
+                    payload = self.store.load_blob(layer, store_spec)
+                    if payload is not None:
+                        value = payload["artifact"]
+                        with self._lock:
+                            self._blobs[full_key] = value
+                        return value
+                with self._lock:
+                    setattr(self, builds, getattr(self, builds) + 1)
+                value = build()
+                with self._lock:
+                    self._blobs[full_key] = value
+                if self.store is not None and store_spec is not None:
+                    self.store.save_blob(layer, store_spec,
+                                         {"artifact": value})
+                return value
+            finally:
+                self._prune_lock(("blob",) + full_key)
 
     def stats(self) -> Dict[str, int]:
         out = {"trace_builds": self.trace_builds,
@@ -262,7 +319,8 @@ def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
         cache = _WORKER_CACHES[cache_key] = AnalysisCache(store=store)
     before = cache.stats()
     records = [backend.evaluate(cache, p, host) for p in points]
-    delta = {k: v - before.get(k, 0) for k, v in cache.stats().items()}
+    delta = {k: v - before.get(k, 0) for k, v in cache.stats().items()
+             if not k.startswith("store_bytes")}   # gauges, not counters
     return records, delta
 
 
@@ -392,6 +450,10 @@ class DSEEngine:
                         records[rec.index] = rec
                     for k, v in delta.items():
                         worker_stats[k] = worker_stats.get(k, 0) + v
+            # workers wrote behind this process's back: re-walk the store
+            # so the byte gauges below reflect their artifacts
+            if self.analysis.store is not None:
+                self.analysis.store.invalidate_usage_cache()
         else:
             # warm the analysis cache serially (deterministic build order,
             # exactly one expensive analysis pass per key), then fan out
@@ -404,8 +466,13 @@ class DSEEngine:
         # stats cover THIS run only, whatever the executor: thread/serial
         # report the shared-cache counter delta, process mode the summed
         # per-worker deltas (each chunk is one analysis key, so they agree)
+        stats_after = self.analysis.stats()
         stats = worker_stats if worker_stats is not None else {
-            k: v - stats_before.get(k, 0)
-            for k, v in self.analysis.stats().items()}
+            k: v - stats_before.get(k, 0) for k, v in stats_after.items()}
+        # store_bytes_* are gauges (current on-disk footprint), not
+        # counters — report the absolute value, never a delta
+        for k, v in stats_after.items():
+            if k.startswith("store_bytes"):
+                stats[k] = v
         return SweepResults(records=list(records), stats=stats,
                             elapsed_s=time.perf_counter() - t0)

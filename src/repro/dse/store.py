@@ -4,11 +4,15 @@ The in-memory :class:`~repro.dse.engine.AnalysisCache` makes one *engine*
 cheap; this module makes repeated *invocations* cheap.  An
 :class:`AnalysisStore` persists the two expensive sweep layers on disk:
 
-  Layer 1 — traced program (the CIQ + RUT/IHT + cache state) and the
-  IDG/flow tables, keyed by ``(workload fingerprint, cache geometry,
-  trace-VM version)``;
-  Layer 2 — accepted candidates + the reshaped trace, keyed by the layer-1
-  key plus the full :class:`~repro.core.offload.OffloadConfig`.
+  Layer 1 — the traced program as a compressed ``.npz`` column archive
+  (one numpy array per I-state column — see
+  :class:`repro.core.columnar.ColumnarTrace` — plus cache counters and
+  program outputs) and a sibling flow-table archive, keyed by ``(workload
+  fingerprint, cache geometry, trace-VM version)``.  RUT/IHT are *not*
+  persisted: they are derived tables, reconstructed vectorized on demand.
+  Layer 2 — accepted candidates + the reshaped trace (zlib-compressed
+  pickle), keyed by the layer-1 key plus the full
+  :class:`~repro.core.offload.OffloadConfig`.
 
 Keys are content-addressed: the workload fingerprint hashes the builder
 module's *source*, the cache key is the full geometry (size/assoc/banks/
@@ -28,8 +32,10 @@ Durability rules:
   * loads verify a format stamp and the embedded key; anything unreadable
     or stale is dropped (counted in ``corrupt_drops``) and treated as a
     miss — the caller rebuilds and overwrites;
-  * artifacts are self-contained pickles (see the serialization hooks on
-    :class:`~repro.core.isa.Inst` and
+  * artifacts are self-contained: layer 1 rehydrates a full
+    :class:`~repro.core.trace.TraceResult` (including the structural trace
+    other geometries can replay) from the columns alone, layer 2 a
+    ``(OffloadResult, ReshapedTrace)`` pair (see
     :func:`~repro.core.offload.rehydrate_analysis`).
 
 ``AnalysisCache(store=...)`` layers this under the in-memory memo, and
@@ -50,22 +56,30 @@ from __future__ import annotations
 
 import hashlib
 import inspect
+import io
 import json
 import os
 import pathlib
 import pickle
 import tempfile
 import threading
+import zlib
 from typing import Dict, Optional, Sequence, Tuple, Union
 
-from repro.core.cache import CacheConfig
+import numpy as np
+
+from repro.core.cache import CacheConfig, CacheHierarchy
+from repro.core.columnar import ColumnarTrace
 from repro.core.idg import FlowIndex
 from repro.core.offload import ANALYSIS_VERSION, OffloadConfig, OffloadResult
 from repro.core.reshape import ReshapedTrace
-from repro.core.trace import TRACE_VM_VERSION, TraceResult
+from repro.core.trace import (TRACE_VM_VERSION, StructuralTrace, TraceResult)
 
-# Bump when the on-disk envelope ({format, key, payload} pickle) changes.
-STORE_FORMAT = 1
+# Bump when the on-disk envelope (zlib-compressed {format, key, payload}
+# pickle) changes.  v2: envelopes are compressed.
+STORE_FORMAT = 2
+# Bump when the layer-1 .npz column encoding changes.
+NPZ_FORMAT = 1
 
 _FINGERPRINTS: Dict[str, str] = {}
 
@@ -130,6 +144,7 @@ class AnalysisStore:
         # counters are shared by thread-pool sweeps and asserted on exactly
         # by tests/CI, so increments go through a lock
         self._stats_lock = threading.Lock()
+        self._usage_cache: Optional[Dict[str, int]] = None
         self.l1_hits = 0
         self.l1_misses = 0
         self.l2_hits = 0
@@ -140,6 +155,22 @@ class AnalysisStore:
     def _bump(self, counter: str, by: int = 1) -> None:
         with self._stats_lock:
             setattr(self, counter, getattr(self, counter) + by)
+            if counter in ("writes", "corrupt_drops"):
+                self._usage_cache = None        # disk contents changed
+
+    def invalidate_usage_cache(self) -> None:
+        """Force the next ``disk_usage()`` to re-walk (callers that know
+        another process just wrote — e.g. after a process-pool sweep)."""
+        with self._stats_lock:
+            self._usage_cache = None
+
+    def _drop(self, path: pathlib.Path) -> None:
+        """Remove an artifact that failed verification/rehydration."""
+        self._bump("corrupt_drops")
+        try:
+            path.unlink()
+        except OSError:
+            pass
 
     # -------------------------------------------------------------- keys
     def _key(self, spec: dict) -> str:
@@ -170,8 +201,11 @@ class AnalysisStore:
             "offload": _offload_spec(cfg),
         })
 
-    def _path(self, layer: int, key: str) -> pathlib.Path:
-        return self.root / f"layer{layer}" / f"{key}.pkl"
+    def _path(self, layer: int, key: str, backend: str = "cim",
+              suffix: str = "pkl") -> pathlib.Path:
+        # filenames lead with the owning backend so per-backend disk usage
+        # (`stats()["store_bytes_<backend>"]`) is attributable by name
+        return self.root / f"layer{layer}" / f"{backend}-{key}.{suffix}"
 
     # ------------------------------------------------- generic backend blobs
     # Non-CiM analysis backends persist their artifacts through these: the
@@ -182,7 +216,8 @@ class AnalysisStore:
     # them), so CiM and TPU artifacts coexist in one cache directory.
     def load_blob(self, layer: int, spec: dict) -> Optional[dict]:
         key = self._key({"layer": layer, **spec})
-        payload = self._read(self._path(layer, key), key)
+        backend = str(spec.get("backend", "blob"))
+        payload = self._read(self._path(layer, key, backend), key)
         if payload is None:
             self._bump("l1_misses" if layer == 1 else "l2_misses")
             return None
@@ -191,14 +226,15 @@ class AnalysisStore:
 
     def save_blob(self, layer: int, spec: dict, payload: dict) -> None:
         key = self._key({"layer": layer, **spec})
-        self._write(self._path(layer, key), key, payload)
+        backend = str(spec.get("backend", "blob"))
+        self._write(self._path(layer, key, backend), key, payload)
 
     # ---------------------------------------------------------------- io
     def _read(self, path: pathlib.Path, expect_key: str) -> Optional[dict]:
         """Load + verify one artifact; anything wrong is a recoverable miss."""
         try:
             with open(path, "rb") as f:
-                doc = pickle.load(f)
+                doc = pickle.loads(zlib.decompress(f.read()))
         except FileNotFoundError:
             return None
         except Exception:
@@ -217,13 +253,14 @@ class AnalysisStore:
     def _write(self, path: pathlib.Path, key: str, payload: dict) -> None:
         """Atomic publish: readers see the old artifact or the new one,
         never bytes in between; racing writers settle on a complete file."""
+        data = zlib.compress(pickle.dumps(
+            {"format": STORE_FORMAT, "key": key, "payload": payload},
+            protocol=pickle.HIGHEST_PROTOCOL))
         fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name,
                                    suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
-                pickle.dump({"format": STORE_FORMAT, "key": key,
-                             "payload": payload},
-                            f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.write(data)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
@@ -236,37 +273,119 @@ class AnalysisStore:
         self._bump("writes")
 
     # ------------------------------------------------------------ layer 1
-    # The trace and its flow tables live in two sibling files under one key:
-    # the (large) trace pickle is written once when first built, and the
-    # flow file appears later when an analysis first needs it — upgrading a
-    # key never re-serializes the trace, and a concurrent trace-only save
-    # can never downgrade an artifact that already has flow tables.
+    # Layer-1 artifacts are compressed .npz column archives, not pickles:
+    # one numpy array per I-state column (repro.core.columnar), the cache
+    # hit/miss counters, and the program outputs.  The trace and its flow
+    # tables live in two sibling files under one key: the trace archive is
+    # written once when first built, and the flow file appears later when
+    # an analysis first needs it — upgrading a key never re-serializes the
+    # trace, and a concurrent trace-only save can never downgrade an
+    # artifact that already has flow tables.
     def _flow_path(self, key: str) -> pathlib.Path:
         # the flow tables additionally depend on the IDG/flow construction
         # semantics, which the trace half of the key does not cover
-        return self.root / "layer1" / f"{key}.flow-v{ANALYSIS_VERSION}.pkl"
+        return self.root / "layer1" / f"cim-{key}.flow-v{ANALYSIS_VERSION}.npz"
+
+    # ---- npz envelope ----------------------------------------------------
+    def _write_npz(self, path: pathlib.Path, key: str,
+                   arrays: Dict[str, np.ndarray]) -> None:
+        buf = io.BytesIO()
+        np.savez_compressed(
+            buf,
+            meta_store_key=np.frombuffer(key.encode(), dtype=np.uint8),
+            meta_npz_format=np.asarray([NPZ_FORMAT], np.int64),
+            **arrays)
+        data = buf.getvalue()
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name,
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._bump("writes")
+
+    def _read_npz(self, path: pathlib.Path,
+                  expect_key: str) -> Optional[Dict[str, np.ndarray]]:
+        """Load + verify one .npz artifact; anything wrong is a miss."""
+        try:
+            with np.load(path) as z:
+                arrays = {k: z[k] for k in z.files}
+            key = bytes(arrays["meta_store_key"]).decode()
+            fmt = int(arrays["meta_npz_format"][0])
+            if key != expect_key or fmt != NPZ_FORMAT:
+                raise ValueError("stale or foreign artifact")
+            return arrays
+        except FileNotFoundError:
+            return None
+        except Exception:
+            self._bump("corrupt_drops")
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
 
     def load_layer1(self, workload: str, cache_levels: Sequence[CacheConfig]
                     ) -> Optional[Tuple[TraceResult, Optional[FlowIndex]]]:
         key = self.layer1_key(workload, cache_levels)
-        payload = self._read(self._path(1, key), key)
-        if payload is None:
+        trace_path = self._path(1, key, suffix="npz")
+        arrays = self._read_npz(trace_path, key)
+        if arrays is None:
             self._bump("l1_misses")
             return None
-        flow_payload = self._read(self._flow_path(key), key)
+        try:
+            ct = ColumnarTrace.from_arrays(arrays)
+            hier = CacheHierarchy(tuple(cache_levels))
+            hier.restore_counters(dict(zip(
+                [str(s) for s in arrays["meta_cc_names"]],
+                arrays["meta_cc_vals"].tolist())))
+            outputs = [arrays[f"out_{i}"]
+                       for i in range(int(arrays["meta_n_outputs"][0]))]
+        except Exception:
+            # drop the archive, not just the load: save_layer1 skips keys
+            # whose file exists, so a bad-but-readable artifact must leave
+            # the filesystem or it would never be repaired
+            self._drop(trace_path)
+            self._bump("l1_misses")
+            return None
+        tr = TraceResult(ct, hier, outputs,
+                         structural=StructuralTrace(ct, outputs))
+        flow_arrays = self._read_npz(self._flow_path(key), key)
+        flow = None
+        if flow_arrays is not None:
+            try:
+                flow = FlowIndex.from_arrays(flow_arrays)
+            except Exception:
+                self._drop(self._flow_path(key))
         self._bump("l1_hits")
-        return (payload["trace"],
-                flow_payload["flow"] if flow_payload is not None else None)
+        return tr, flow
 
     def save_layer1(self, workload: str, cache_levels: Sequence[CacheConfig],
                     trace_result: TraceResult,
                     flow: Optional[FlowIndex] = None) -> None:
         key = self.layer1_key(workload, cache_levels)
-        trace_path = self._path(1, key)
+        trace_path = self._path(1, key, suffix="npz")
         if not trace_path.exists():     # traces are deterministic per key:
-            self._write(trace_path, key, {"trace": trace_result})
-        if flow is not None:
-            self._write(self._flow_path(key), key, {"flow": flow})
+            arrays = trace_result.trace.to_arrays()
+            counters = trace_result.cache.counters()
+            arrays["meta_cc_names"] = np.asarray(list(counters), dtype="U")
+            arrays["meta_cc_vals"] = np.asarray(list(counters.values()),
+                                                np.int64)
+            arrays["meta_n_outputs"] = np.asarray(
+                [len(trace_result.outputs)], np.int64)
+            for i, out in enumerate(trace_result.outputs):
+                arrays[f"out_{i}"] = np.asarray(out)
+            self._write_npz(trace_path, key, arrays)
+        if flow is not None and not self._flow_path(key).exists():
+            self._write_npz(self._flow_path(key), key, flow.to_arrays())
 
     # ------------------------------------------------------------ layer 2
     def load_layer2(self, workload: str, cache_levels: Sequence[CacheConfig],
@@ -288,13 +407,51 @@ class AnalysisStore:
                     {"offload": offload, "reshaped": reshaped})
 
     # -------------------------------------------------------------- misc
+    def disk_usage(self) -> Dict[str, int]:
+        """On-disk bytes, per layer and per owning backend (filenames lead
+        with the backend name, so attribution is a directory walk).
+
+        The walk result is cached and invalidated by this handle's own
+        writes/drops, so the repeated ``stats()`` reads on the sweep hot
+        path (run deltas, worker-chunk deltas) stay O(1); another
+        process's concurrent writes surface on this handle's next write
+        or a fresh ``AnalysisStore``."""
+        cached = self._usage_cache
+        if cached is not None:
+            return dict(cached)
+        out = {"store_bytes_total": 0, "store_bytes_layer1": 0,
+               "store_bytes_layer2": 0}
+        for layer in ("layer1", "layer2"):
+            d = self.root / layer
+            if not d.is_dir():
+                continue
+            for f in d.iterdir():
+                try:
+                    sz = f.stat().st_size
+                except OSError:
+                    continue
+                out["store_bytes_total"] += sz
+                out[f"store_bytes_{layer}"] += sz
+                # backend prefix before the first dash; files that predate
+                # the prefixed naming (or don't match a plausible backend
+                # name) land under "unknown"
+                backend = f.name.split("-", 1)[0]
+                if not ("-" in f.name and backend.isalpha()
+                        and len(backend) <= 16):
+                    backend = "unknown"
+                bkey = f"store_bytes_{backend}"
+                out[bkey] = out.get(bkey, 0) + sz
+        self._usage_cache = dict(out)
+        return out
+
     def stats(self) -> Dict[str, int]:
         return {"store_l1_hits": self.l1_hits,
                 "store_l1_misses": self.l1_misses,
                 "store_l2_hits": self.l2_hits,
                 "store_l2_misses": self.l2_misses,
                 "store_writes": self.writes,
-                "store_corrupt_drops": self.corrupt_drops}
+                "store_corrupt_drops": self.corrupt_drops,
+                **self.disk_usage()}
 
     def __repr__(self) -> str:
         return (f"AnalysisStore({str(self.root)!r}, version={self.version}, "

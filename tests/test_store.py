@@ -121,9 +121,9 @@ def test_version_bump_invalidates(tmp_path):
 def test_corrupt_file_recovery(tmp_path):
     store = AnalysisStore(tmp_path)
     AnalysisCache(store=store).trace("NB", CACHE)
-    files = list((tmp_path / "layer1").glob("*.pkl"))
+    files = list((tmp_path / "layer1").glob("*.npz"))
     assert len(files) == 1
-    files[0].write_bytes(b"not a pickle")
+    files[0].write_bytes(b"not an npz archive")
 
     fresh = AnalysisStore(tmp_path)
     assert fresh.load_layer1("NB", CACHE.levels) is None
@@ -136,15 +136,48 @@ def test_corrupt_file_recovery(tmp_path):
     assert AnalysisStore(tmp_path).load_layer1("NB", CACHE.levels) is not None
 
 
+def test_bad_payload_is_dropped_and_repaired(tmp_path):
+    """An archive whose envelope verifies but whose payload fails
+    rehydration must be unlinked — save_layer1 skips existing files, so a
+    merely-ignored artifact would never be repaired."""
+    import numpy as np
+    from repro.dse.store import NPZ_FORMAT
+    store = AnalysisStore(tmp_path)
+    AnalysisCache(store=store).trace("NB", CACHE)
+    (path,) = (tmp_path / "layer1").glob("*.npz")
+    key = store.layer1_key("NB", CACHE.levels)
+    np.savez_compressed(                      # valid envelope, no columns
+        path, meta_store_key=np.frombuffer(key.encode(), dtype=np.uint8),
+        meta_npz_format=np.asarray([NPZ_FORMAT], np.int64))
+
+    fresh = AnalysisStore(tmp_path)
+    assert fresh.load_layer1("NB", CACHE.levels) is None
+    assert fresh.corrupt_drops == 1
+    assert not path.exists()                  # dropped, so a rebuild heals it
+    c = AnalysisCache(store=fresh)
+    c.trace("NB", CACHE)
+    assert c.trace_builds == 1
+    assert AnalysisStore(tmp_path).load_layer1("NB", CACHE.levels) is not None
+
+
 def test_foreign_payload_rejected(tmp_path):
-    """A well-formed pickle that isn't ours (wrong envelope/key) is a miss."""
+    """A well-formed archive that isn't ours (wrong embedded key) is a miss."""
+    import numpy as np
+    from repro.dse.store import NPZ_FORMAT
     store = AnalysisStore(tmp_path)
     key = store.layer1_key("NB", CACHE.levels)
-    path = tmp_path / "layer1" / f"{key}.pkl"
+    path = tmp_path / "layer1" / f"cim-{key}.npz"
+    np.savez_compressed(
+        path, meta_store_key=np.frombuffer(b"somebody-else", dtype=np.uint8),
+        meta_npz_format=np.asarray([NPZ_FORMAT], np.int64))
+    assert store.load_layer1("NB", CACHE.levels) is None
+    assert store.corrupt_drops == 1
+
+    # ...and a well-formed *pickle* under the npz name is dropped, too
     path.write_bytes(pickle.dumps({"format": STORE_FORMAT,
                                    "key": "somebody-else", "payload": {}}))
     assert store.load_layer1("NB", CACHE.levels) is None
-    assert store.corrupt_drops == 1
+    assert store.corrupt_drops == 2
 
 
 # ----------------------------------------------------------- two engines
@@ -169,6 +202,22 @@ def test_two_engines_share_store_zero_rebuilds(tmp_path):
 def test_engine_rejects_cache_plus_store(tmp_path):
     with pytest.raises(ValueError):
         DSEEngine(cache=AnalysisCache(), store=tmp_path)
+
+
+def test_store_disk_usage_gauges(tmp_path):
+    """stats() reports on-disk bytes per layer and per owning backend —
+    absolute gauges, surfaced through SweepResults.stats as well."""
+    res = DSEEngine(store=tmp_path).run(SweepSpace(workloads=("NB",)))
+    store = AnalysisStore(tmp_path)
+    usage = store.disk_usage()
+    assert usage["store_bytes_layer1"] > 0
+    assert usage["store_bytes_layer2"] > 0
+    assert usage["store_bytes_cim"] == usage["store_bytes_total"] == \
+        usage["store_bytes_layer1"] + usage["store_bytes_layer2"]
+    # engine stats carry the gauges as absolutes (not deltas)
+    assert res.stats["store_bytes_total"] == usage["store_bytes_total"]
+    # gauges live in stats() alongside the counters
+    assert store.stats()["store_bytes_layer1"] == usage["store_bytes_layer1"]
 
 
 # ------------------------------------------------- backend coexistence
