@@ -9,10 +9,17 @@ struct-of-arrays refactor).
 
     PYTHONPATH=src python -m benchmarks.run --timing-json BENCH_analysis.json
     PYTHONPATH=src python -m benchmarks.run --timing-json out.json \\
-        --timing-workloads NB          # CI: record-only, smallest workload
+        --timing-workloads NB \\
+        --timing-gate benchmarks/baselines/timing_nb.json   # CI gate
 
-The JSON is record-only (no thresholds); CI uploads it as an artifact so
-regressions show up as a trend, not a gate.
+Most numbers are record-only (uploaded as a CI artifact so regressions
+show up as a trend), but ``--timing-gate BASELINE`` turns the selection
+and pricing throughputs into a hard gate: the run fails if either drops
+more than :data:`GATE_THRESHOLD` below the committed baseline.  Raw
+wall-clock is meaningless across machines, so both the baseline and the
+measuring run carry a ``machine_calibration`` score from a fixed numpy
+kernel (:func:`calibrate`) and the baseline throughput is scaled by the
+score ratio before comparison.
 """
 from __future__ import annotations
 
@@ -36,11 +43,84 @@ BASELINE = {
 
 FIG14_CACHES = ("32K+256K", "64K+256K", "64K+2M")
 
+# the gated stages (ISSUE 6): selection + pricing throughput may not drop
+# more than this fraction below the calibration-scaled committed baseline
+GATE_STAGES = ("select", "price")
+GATE_THRESHOLD = 0.25
+
 
 def _time(fn):
     t0 = time.perf_counter()
     out = fn()
     return out, time.perf_counter() - t0
+
+
+def _best_of(fn, repeats: int = 3):
+    """Best-of-N wall time — the gated stages are fast enough that a single
+    sample is scheduler noise; min-of-3 is what the gate compares."""
+    out, best = None, float("inf")
+    for _ in range(repeats):
+        out, dt = _time(fn)
+        best = min(best, dt)
+    return out, best
+
+
+def calibrate(repeats: int = 3) -> Dict:
+    """Machine-speed score from a fixed numpy kernel.
+
+    The kernel mirrors the columnar selection/pricing mix — sort, scan,
+    masked reductions over a ~1M-element array — so its throughput tracks
+    how fast *this* machine runs the gated stages.  Committed baselines
+    store their score; the gate scales baseline throughput by
+    ``score_now / score_then`` before comparing, making the 25% threshold
+    portable across container generations.
+    """
+    import numpy as np
+    rng = np.random.default_rng(12345)
+    a = rng.standard_normal(1_000_000)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        s = np.sort(a)
+        c = np.cumsum(s)
+        m = (a > 0.0)
+        _ = float(c[m[: c.size]].sum()) + float(np.count_nonzero(m))
+        best = min(best, time.perf_counter() - t0)
+    return {"kernel": "sort+cumsum+masked-reduce@1M",
+            "score": round(1_000_000 / best / 1e6, 2)}   # M elements/s
+
+
+def gate(doc: Dict, baseline: Dict,
+         threshold: float = GATE_THRESHOLD) -> List[str]:
+    """Compare a fresh timing doc against a committed baseline doc.
+
+    Returns human-readable failure strings (empty == pass).  Only docs
+    measured over the same workload set are comparable; anything else is
+    itself a failure so CI can't silently gate against stale baselines.
+    """
+    failures: List[str] = []
+    if list(baseline.get("workloads", [])) != list(doc["workloads"]):
+        return [f"baseline workloads {baseline.get('workloads')} != "
+                f"measured {doc['workloads']} — re-record the baseline"]
+    base_cal = baseline.get("machine_calibration", {}).get("score")
+    if not base_cal:
+        return ["baseline has no machine_calibration score — re-record it "
+                "with this version of benchmarks/analysis_timing.py"]
+    scale = doc["machine_calibration"]["score"] / base_cal
+    for stage in GATE_STAGES:
+        cur = doc["totals"].get(f"{stage}_ips")
+        base = baseline["totals"].get(f"{stage}_ips")
+        if not cur or not base:
+            failures.append(f"{stage}: missing {stage}_ips in doc/baseline")
+            continue
+        floor = base * scale * (1.0 - threshold)
+        if cur < floor:
+            failures.append(
+                f"{stage}: {cur:,.0f} inst/s < floor {floor:,.0f} "
+                f"(baseline {base:,.0f} x calib {scale:.2f} x "
+                f"{1.0 - threshold:.2f}) — "
+                f"{(1 - cur / (base * scale)) * 100:.0f}% regression")
+    return failures
 
 
 def run(workloads: Optional[Sequence[str]] = None,
@@ -73,9 +153,9 @@ def run(workloads: Optional[Sequence[str]] = None,
             replay_s += dt
             trs.append(tr)
         an, idg_s = _time(lambda: analyze_trace(trs[0]))
-        (res, rs), select_s = _time(
+        (res, rs), select_s = _best_of(
             lambda: (lambda r: (r, reshape(trs[0].trace, r)))(an.select(cfg)))
-        rep, price_s = _time(lambda: profile_system(
+        rep, price_s = _best_of(lambda: profile_system(
             trs[0], offload=res, reshaped=rs))
         stages[name] = {
             "n_instructions": n,
@@ -99,6 +179,10 @@ def run(workloads: Optional[Sequence[str]] = None,
     for k in list(totals):
         if k.endswith("_s"):
             totals[k] = round(totals[k], 4)
+    for stage in GATE_STAGES:       # aggregate throughput the gate compares
+        dt = totals[f"{stage}_s"]
+        totals[f"{stage}_ips"] = (round(totals["n_instructions"] / dt)
+                                  if dt else None)
 
     # ---- end-to-end: cold fig14-equivalent sweep (fresh engine) ---------
     space = SweepSpace(workloads=workloads, caches=FIG14_CACHES)
@@ -134,6 +218,7 @@ def run(workloads: Optional[Sequence[str]] = None,
             BASELINE["layer1_bytes"] / usage["store_bytes_layer1"], 2)
 
     doc = {"workloads": list(workloads), "full_fig14_set": full_set,
+           "machine_calibration": calibrate(),
            "stages": stages, "totals": totals, "cold_sweep": cold,
            "layer1_store": blob}
     if json_path:
@@ -142,7 +227,8 @@ def run(workloads: Optional[Sequence[str]] = None,
 
 
 def main(workloads: Optional[Sequence[str]] = None,
-         json_path: Optional[str] = None):
+         json_path: Optional[str] = None,
+         gate_path: Optional[str] = None):
     banner("BENCH: columnar analysis pipeline throughput")
     doc = run(workloads=workloads, json_path=json_path)
     for name, s in doc["stages"].items():
@@ -167,6 +253,25 @@ def main(workloads: Optional[Sequence[str]] = None,
     print(line)
     if json_path:
         print(f"  [json] {json_path}")
+    if gate_path:
+        baseline = json.loads(pathlib.Path(gate_path).read_text())
+        failures = gate(doc, baseline)
+        doc["gate"] = {"baseline": str(gate_path),
+                       "threshold": GATE_THRESHOLD,
+                       "stages": list(GATE_STAGES),
+                       "calibration_scale": round(
+                           doc["machine_calibration"]["score"]
+                           / baseline.get("machine_calibration",
+                                          {}).get("score", 1) or 1, 3),
+                       "failures": failures}
+        if json_path:       # re-write with the verdict attached
+            pathlib.Path(json_path).write_text(json.dumps(doc, indent=1))
+        for f in failures:
+            print(f"  GATE FAIL: {f}")
+        if not failures:
+            scale = doc["gate"]["calibration_scale"]
+            print(f"  gate: select+price within {GATE_THRESHOLD:.0%} of "
+                  f"{gate_path} (calibration scale x{scale}) — passed")
     return doc
 
 

@@ -1,0 +1,278 @@
+"""BENCH: DSE-service load generation — "heavy traffic" with a number.
+
+N concurrent clients sweep *overlapping* design spaces against one
+daemon, so the same canonical ``SweepPoint.key``s arrive from many
+requests at once; the daemon's coalescing stack (record memo +
+single-flight + warm analysis cache) must collapse them to one
+evaluation per unique key.  The benchmark measures and asserts exactly
+that:
+
+* **requests/sec, p50/p99 latency** over the whole storm,
+* **dedup ratio** — points requested / points evaluated (> 1.5× with the
+  default overlapping spaces),
+* **evaluations == unique keys** — the daemon never computed a design
+  twice,
+* **warm repeat** — an exhaustive sweep re-issued against the warm
+  daemon performs zero new trace builds and zero new evaluations.
+
+Results land in ``BENCH_service.json``.  By default the daemon runs
+in-process (deterministic for CI); ``--url`` points the storm at an
+externally started ``python -m repro.dse.service`` instead — the CI
+service smoke job uses that to exercise the real process + SIGTERM
+path::
+
+    PYTHONPATH=src python -m benchmarks.bench_service
+    PYTHONPATH=src python -m benchmarks.bench_service \\
+        --clients 8 --json BENCH_service.json
+    PYTHONPATH=src python -m benchmarks.bench_service \\
+        --url http://127.0.0.1:8321 --workloads NB
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import pathlib
+import statistics
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import banner
+from repro.dse import SweepSpace
+from repro.dse.service import ServiceClient, running_server
+
+CACHES = ("32K+256K", "64K+256K", "64K+2M")
+LEVELS = ("L1_only", "L2_only", "both")
+TECHS = ("sram", "fefet")
+
+# reserved for the coalesce probe: never part of the main storm, so its
+# analysis keys are guaranteed cold when the probe fires
+PROBE_WORKLOAD = "DT"
+
+
+def client_space(client_id: int, workloads: Sequence[str]) -> Dict:
+    """The request document for one client: a rotated, truncated slice of
+    the full axis grid — every client overlaps its neighbors on most keys
+    but no two slices are identical."""
+    def rotate(axis: Sequence[str], k: int) -> List[str]:
+        k = k % len(axis)
+        return list(axis[k:] + axis[:k])
+
+    caches = rotate(CACHES, client_id)[: 2 + client_id % 2]
+    levels = rotate(LEVELS, client_id // 2)[: 2 + (client_id + 1) % 2]
+    return {"workloads": list(workloads), "caches": caches,
+            "cim_levels": levels, "techs": list(TECHS), "mode": "sweep"}
+
+
+def unique_keys(requests: Sequence[Dict]) -> int:
+    """How many distinct canonical designs the storm asks for in total —
+    computed client-side from the same SweepSpace enumeration the daemon
+    uses, so `evaluated == unique` is an exact cross-check."""
+    keys = set()
+    for doc in requests:
+        space = SweepSpace(workloads=tuple(doc["workloads"]),
+                           caches=tuple(doc["caches"]),
+                           cim_levels=tuple(doc["cim_levels"]),
+                           techs=tuple(doc["techs"]))
+        keys.update(p.key for p in space.points())
+    return len(keys)
+
+
+def run(url: Optional[str] = None, clients: int = 8,
+        requests_per_client: int = 2,
+        workloads: Sequence[str] = ("NB", "LCS"),
+        cache_dir: Optional[str] = None,
+        json_path: Optional[str] = None) -> Dict:
+    ctx = (contextlib.nullcontext((url, None)) if url
+           else running_server(cache_dir=cache_dir, max_workers=4))
+    with ctx as (base_url, _service):
+        client = ServiceClient(base_url)
+        client.wait_ready()
+        m0 = client.metrics()
+
+        # ---- the storm: clients * requests, overlapping spaces ---------
+        docs = [client_space(i % clients, workloads)
+                for i in range(clients * requests_per_client)]
+        latencies: List[float] = []
+        errors: List[str] = []
+        lock = threading.Lock()
+        barrier = threading.Barrier(clients)
+
+        def one_client(cid: int) -> None:
+            local = ServiceClient(base_url)
+            barrier.wait()                   # all clients fire together
+            for rid in range(requests_per_client):
+                doc = docs[cid * requests_per_client + rid]
+                t0 = time.perf_counter()
+                try:
+                    local.sweep(doc["workloads"], caches=doc["caches"],
+                                cim_levels=doc["cim_levels"],
+                                techs=doc["techs"])
+                except Exception as exc:  # noqa: BLE001 — reported below
+                    with lock:
+                        errors.append(f"client {cid} req {rid}: {exc}")
+                    return
+                with lock:
+                    latencies.append(time.perf_counter() - t0)
+
+        threads = [threading.Thread(target=one_client, args=(i,))
+                   for i in range(clients)]
+        t_start = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        storm_s = time.perf_counter() - t_start
+        if errors:
+            raise RuntimeError("bench clients failed: " + "; ".join(errors))
+
+        m1 = client.metrics()
+        pts0 = m0["service"].get("points", {})
+        pts1 = m1["service"]["points"]
+        requested = pts1["requested"] - pts0.get("requested", 0)
+        evaluated = pts1["evaluated"] - pts0.get("evaluated", 0)
+        coalesced = pts1["coalesced"] - pts0.get("coalesced", 0)
+        memo_hits = pts1["memo_hits"] - pts0.get("memo_hits", 0)
+        unique = unique_keys(docs)
+
+        # ---- coalesce probe: guaranteed-overlap identical requests -----
+        # A perfectly serialized storm could in principle satisfy every
+        # duplicate from the memo; fire identical requests at a cold
+        # workload simultaneously so the single-flight path itself is
+        # exercised (trace builds take ~100ms, launch skew ~1ms).
+        if coalesced == 0:
+            probe_barrier = threading.Barrier(4)
+
+            def probe() -> None:
+                local = ServiceClient(base_url)
+                probe_barrier.wait()
+                local.sweep([PROBE_WORKLOAD], caches=list(CACHES))
+
+            probe_threads = [threading.Thread(target=probe)
+                             for _ in range(4)]
+            for t in probe_threads:
+                t.start()
+            for t in probe_threads:
+                t.join()
+            m1 = client.metrics()
+            pts1 = m1["service"]["points"]
+            coalesced = pts1["coalesced"] - pts0.get("coalesced", 0)
+
+        # ---- warm repeat: zero new trace builds, zero evaluations ------
+        warm_doc = client_space(0, workloads)
+        builds_before = m1["cache"]["cim"]["layer1"]["builds"]
+        eval_before = m1["service"]["points"]["evaluated"]
+        reply = client.sweep(warm_doc["workloads"], caches=warm_doc["caches"],
+                             cim_levels=warm_doc["cim_levels"],
+                             techs=warm_doc["techs"])
+        m2 = client.metrics()
+        warm_trace_builds = (m2["cache"]["cim"]["layer1"]["builds"]
+                             - builds_before)
+        warm_evaluated = m2["service"]["points"]["evaluated"] - eval_before
+
+        ordered = sorted(latencies)
+
+        def pick(q: float) -> float:
+            return ordered[min(len(ordered) - 1,
+                               max(0, round(q * (len(ordered) - 1))))]
+
+        doc = {
+            "clients": clients,
+            "requests_per_client": requests_per_client,
+            "workloads": list(workloads),
+            "n_requests": len(latencies),
+            "storm_wall_s": round(storm_s, 3),
+            "requests_per_s": round(len(latencies) / storm_s, 2),
+            "latency_s": {
+                "p50": round(pick(0.50), 4), "p90": round(pick(0.90), 4),
+                "p99": round(pick(0.99), 4),
+                "mean": round(statistics.fmean(latencies), 4),
+                "max": round(ordered[-1], 4)},
+            "points": {"requested": requested, "evaluated": evaluated,
+                       "unique_keys": unique, "coalesced": coalesced,
+                       "memo_hits": memo_hits},
+            "dedup_ratio": round(requested / evaluated, 3) if evaluated
+                           else None,
+            "warm_repeat": {"n_records": len(reply.records),
+                            "trace_builds": warm_trace_builds,
+                            "evaluated": warm_evaluated},
+        }
+    if json_path:
+        pathlib.Path(json_path).write_text(json.dumps(doc, indent=1))
+    return doc
+
+
+def check(doc: Dict) -> List[str]:
+    """The bench's own gates (ISSUE 6 acceptance criteria)."""
+    failures = []
+    pts = doc["points"]
+    if pts["evaluated"] != pts["unique_keys"]:
+        failures.append(f"evaluated {pts['evaluated']} != unique keys "
+                        f"{pts['unique_keys']} — a design was computed twice")
+    if doc["dedup_ratio"] is None or doc["dedup_ratio"] <= 1.5:
+        failures.append(f"dedup ratio {doc['dedup_ratio']} <= 1.5x — "
+                        f"overlapping requests were not coalesced")
+    if pts["coalesced"] < 1:
+        failures.append("zero coalesced evaluations — the single-flight "
+                        "path never fired")
+    warm = doc["warm_repeat"]
+    if warm["trace_builds"] != 0 or warm["evaluated"] != 0:
+        failures.append(f"warm repeat did work: {warm['trace_builds']} "
+                        f"trace builds, {warm['evaluated']} evaluations")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--url", default=None,
+                    help="target an externally started daemon instead of "
+                         "an in-process server")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests-per-client", type=int, default=2)
+    ap.add_argument("--workloads", default="NB,LCS",
+                    help="comma-separated Table-IV programs for the storm "
+                         f"(keep {PROBE_WORKLOAD} out: it is the reserved "
+                         "coalesce-probe workload)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent store for the in-process daemon")
+    ap.add_argument("--json", default="BENCH_service.json")
+    ap.add_argument("--no-check", action="store_true",
+                    help="record only; skip the dedup/coalesce gates")
+    args = ap.parse_args(argv)
+
+    banner("BENCH: DSE service under concurrent load")
+    workloads = tuple(args.workloads.split(","))
+    doc = run(url=args.url, clients=args.clients,
+              requests_per_client=args.requests_per_client,
+              workloads=workloads, cache_dir=args.cache_dir,
+              json_path=args.json)
+    lat = doc["latency_s"]
+    pts = doc["points"]
+    print(f"  {doc['n_requests']} requests from {doc['clients']} clients "
+          f"in {doc['storm_wall_s']}s ({doc['requests_per_s']} req/s)")
+    print(f"  latency p50 {lat['p50']}s  p90 {lat['p90']}s  "
+          f"p99 {lat['p99']}s  max {lat['max']}s")
+    print(f"  points: {pts['requested']} requested -> {pts['evaluated']} "
+          f"evaluated ({pts['unique_keys']} unique keys; "
+          f"{pts['coalesced']} coalesced, {pts['memo_hits']} memo hits) "
+          f"— dedup x{doc['dedup_ratio']}")
+    warm = doc["warm_repeat"]
+    print(f"  warm repeat: {warm['n_records']} records, "
+          f"{warm['trace_builds']} trace builds, "
+          f"{warm['evaluated']} evaluations")
+    if args.json:
+        print(f"  [json] {args.json}")
+    if not args.no_check:
+        failures = check(doc)
+        for f in failures:
+            print(f"  FAIL: {f}")
+        if failures:
+            return 1
+        print("  gates: dedup > 1.5x, evaluated == unique, coalesced >= 1, "
+              "warm repeat free — all passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

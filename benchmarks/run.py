@@ -5,11 +5,13 @@
     PYTHONPATH=src python -m benchmarks.run --list     # enumerate artifacts
 
     # per-stage analysis throughput (trace/IDG/selection/pricing), written
-    # as record-only JSON; --timing-workloads restricts to a subset (CI
-    # runs the smallest workload only):
+    # as JSON; --timing-workloads restricts to a subset (CI runs the
+    # smallest workload only), and --timing-gate BASELINE fails the run if
+    # selection+pricing throughput regresses >25% vs the committed,
+    # calibration-scaled baseline:
     PYTHONPATH=src python -m benchmarks.run --timing-json BENCH_analysis.json
     PYTHONPATH=src python -m benchmarks.run --timing-json out.json \\
-        --timing-workloads NB
+        --timing-workloads NB --timing-gate benchmarks/baselines/timing_nb.json
 """
 from __future__ import annotations
 
@@ -65,7 +67,12 @@ def main(argv=None) -> int:
         workloads = None
         if "--timing-workloads" in argv:
             workloads = tuple(take_value("--timing-workloads").split(","))
-        analysis_timing.main(workloads=workloads, json_path=json_path)
+        gate_path = (take_value("--timing-gate")
+                     if "--timing-gate" in argv else None)
+        doc = analysis_timing.main(workloads=workloads, json_path=json_path,
+                                   gate_path=gate_path)
+        if doc.get("gate", {}).get("failures"):
+            return 1
         if not argv:                       # timing only, no named artifacts
             return 0
         # fall through: any remaining names run as usual after the timing

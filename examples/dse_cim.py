@@ -75,12 +75,13 @@ def main(argv=None) -> int:
     ap.add_argument("--hosts", default=None,
                     help="comma-separated host presets to sweep "
                          f"(known: {','.join(HOST_PRESETS)}; CiM backend)")
-    ap.add_argument("--chips", default="v5e,v4,v5p",
+    ap.add_argument("--chips", default=None,
                     help="comma-separated TPU chip presets "
-                         f"(known: {','.join(TPU_PRESETS)}; TPU backend)")
-    ap.add_argument("--thresholds", default="16K,64K,256K",
+                         f"(known: {','.join(TPU_PRESETS)}; TPU backend "
+                         "only, default v5e,v4,v5p)")
+    ap.add_argument("--thresholds", default=None,
                     help="comma-separated fusion min_saved_bytes values "
-                         "(TPU backend)")
+                         "(TPU backend only, default 16K,64K,256K)")
     ap.add_argument("--report", default=None,
                     help="write the markdown sweep report here")
     ap.add_argument("--json", default=None,
@@ -90,6 +91,22 @@ def main(argv=None) -> int:
                          "exhaustive cross-product (same frontier, fewer "
                          "points priced)")
     args = ap.parse_args(argv)
+
+    # each backend owns some axes; mixing them is a mistake worth stopping
+    # at the door rather than silently ignoring the flag (exit code 2)
+    if args.backend == "tpu" and args.hosts is not None:
+        ap.error("--hosts sweeps host CPUs, a CiM-backend axis; the TPU "
+                 "pipeline has no host axis. Drop --hosts or use "
+                 "--backend cim.")
+    if args.backend == "cim":
+        tpu_only = [flag for flag, val in (("--chips", args.chips),
+                                           ("--thresholds", args.thresholds))
+                    if val is not None]
+        if tpu_only:
+            ap.error(f"{'/'.join(tpu_only)} select TPU chip presets and "
+                     f"fusion thresholds, TPU-backend axes; the CiM "
+                     f"pipeline sweeps caches/levels/techs instead. Drop "
+                     f"{'/'.join(tpu_only)} or use --backend tpu.")
 
     if args.backend == "tpu":
         return _tpu_main(args)
@@ -121,7 +138,9 @@ def main(argv=None) -> int:
     if args.cache_dir:
         print(f"   store: {st.get('store_l1_hits', 0)} trace hits / "
               f"{st.get('store_l2_hits', 0)} selection hits / "
-              f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
+              f"{st.get('store_writes', 0)} writes / "
+              f"{st.get('store_corrupt_drops', 0)} corrupt drops "
+              f"under {args.cache_dir}")
         _print_store_bytes(st)
 
     # the fixed Fig. 14/15/16 slices assume the full grid was priced —
@@ -216,16 +235,17 @@ def _tpu_main(args) -> int:
     if workload not in ARCHS:
         print(f"unknown arch {workload!r}; known: {sorted(ARCHS)}")
         return 1
-    chips = tuple(args.chips.split(","))
+    chips = tuple((args.chips or "v5e,v4,v5p").split(","))
     for c in chips:
         if c not in TPU_PRESETS:
             print(f"unknown TPU chip preset {c!r}; "
                   f"known: {sorted(TPU_PRESETS)}")
             return 1
+    raw_thresholds = args.thresholds or "16K,64K,256K"
     try:
-        thresholds = tuple(parse_bytes(t) for t in args.thresholds.split(","))
+        thresholds = tuple(parse_bytes(t) for t in raw_thresholds.split(","))
     except ValueError:
-        print(f"bad --thresholds {args.thresholds!r}; expected "
+        print(f"bad --thresholds {raw_thresholds!r}; expected "
               f"comma-separated byte counts like 16K,64K,1M")
         return 1
     tpus = [TpuOption(TPU_PRESETS[c], t) for c in chips for t in thresholds]
@@ -247,7 +267,9 @@ def _tpu_main(args) -> int:
           f"fusion selections {st.get('offload_builds')})")
     if args.cache_dir:
         print(f"   store: {st.get('store_l1_hits', 0)} analysis hits / "
-              f"{st.get('store_writes', 0)} writes under {args.cache_dir}")
+              f"{st.get('store_writes', 0)} writes / "
+              f"{st.get('store_corrupt_drops', 0)} corrupt drops "
+              f"under {args.cache_dir}")
         _print_store_bytes(st)
 
     if not args.adaptive:

@@ -40,8 +40,8 @@ Quickstart::
 """
 from repro.core.host_model import HOST_PRESETS
 from repro.core.tpu_model import TPU_PRESETS
-from repro.dse.adaptive import (AdaptiveDSE, AdaptiveResult, RoundInfo,
-                                coarse_seed)
+from repro.dse.adaptive import (AdaptiveDSE, AdaptiveResult, RoundEvent,
+                                RoundInfo, coarse_seed)
 from repro.dse.backends import (AnalysisBackend, CimBackend, TpuBackend,
                                 TpuSelection, TpuWorkloadAnalysis,
                                 arch_fingerprint)
@@ -57,7 +57,8 @@ from repro.dse.store import AnalysisStore, workload_fingerprint
 
 __all__ = [
     "AdaptiveDSE", "AdaptiveResult", "AnalysisBackend", "AnalysisCache",
-    "AnalysisStore", "CimBackend", "DSEEngine", "RoundInfo", "TpuBackend",
+    "AnalysisStore", "CimBackend", "DSEEngine", "RoundEvent", "RoundInfo",
+    "TpuBackend",
     "TpuSelection", "TpuWorkloadAnalysis", "arch_fingerprint", "coarse_seed",
     "dominates", "frontier_stable", "neighborhood", "objective_vector",
     "pareto_front", "parse_bytes", "tpu_neighbors", "SweepRecord",

@@ -48,7 +48,8 @@ unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import (Dict, Iterator, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 from repro.dse.engine import DSEEngine
 from repro.dse.pareto import Objective, frontier_stable
@@ -91,6 +92,22 @@ class RoundInfo:
     stable: bool               # frontier unchanged vs the previous round
     stats: Dict[str, int]      # this round's engine counter deltas
     elapsed_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEvent:
+    """One completed refinement round, emitted as it lands.
+
+    The incremental unit of :meth:`AdaptiveDSE.run_iter` — everything a
+    streaming consumer (the DSE service's NDJSON responses, a progress
+    bar) needs to report the round without waiting for the run to finish:
+    the round's cost accounting, the frontier *after* the round, and the
+    merged results so far.  ``results`` is the same accumulating object a
+    final :class:`AdaptiveResult` wraps, not a copy.
+    """
+    info: RoundInfo
+    frontier: List[SweepRecord]       # per-workload frontier after the round
+    results: SweepResults             # merged results through this round
 
 
 @dataclasses.dataclass
@@ -199,7 +216,31 @@ class AdaptiveDSE:
         """Seed → price → frontier → refine loop.
 
         ``seed`` may be a coarse :class:`SweepSpace`, an explicit point
-        list, or ``None`` for :func:`coarse_seed`."""
+        list, or ``None`` for :func:`coarse_seed`.  Drains
+        :meth:`run_iter` — streaming consumers iterate that directly and
+        get each round as it completes."""
+        rounds: List[RoundInfo] = []
+        last: Optional[RoundEvent] = None
+        for event in self.run_iter(seed):
+            rounds.append(event.info)
+            last = event
+        if last is None:                       # empty seed
+            return AdaptiveResult(results=SweepResults(records=[]),
+                                  rounds=[], frontier=[],
+                                  objectives=self.objectives,
+                                  space_size=len(self.space))
+        return AdaptiveResult(results=last.results, rounds=rounds,
+                              frontier=last.frontier,
+                              objectives=self.objectives,
+                              space_size=len(self.space))
+
+    def run_iter(self, seed: Optional[Union[SweepSpace,
+                                            Sequence[SweepPoint]]] = None
+                 ) -> Iterator[RoundEvent]:
+        """Generator form of :meth:`run`: yield a :class:`RoundEvent` the
+        moment each refinement round's pricing completes — the DSE
+        service streams these as NDJSON lines while later rounds are
+        still running.  Same loop, same stopping rules, same records."""
         if seed is None:
             candidates: List[SweepPoint] = coarse_seed(self.space)
         elif isinstance(seed, SweepSpace):
@@ -218,8 +259,6 @@ class AdaptiveDSE:
         seen: Set[Tuple] = set()
         priced_points: List[SweepPoint] = []   # aligned with merged records
         merged: Optional[SweepResults] = None
-        rounds: List[RoundInfo] = []
-        frontier: List[SweepRecord] = []
         prev_frontier: Optional[List[SweepRecord]] = None
 
         for rnd in range(self.max_rounds + 1):
@@ -239,19 +278,16 @@ class AdaptiveDSE:
             # identically still count as frontier movement
             stable = frontier_stable(prev_frontier, frontier, self.objectives,
                                      key=lambda r: priced_points[r.index].key)
-            rounds.append(RoundInfo(
-                round=rnd, n_candidates=len(candidates),
-                n_priced=len(fresh), frontier_size=len(frontier),
-                stable=stable, stats=res.stats, elapsed_s=res.elapsed_s))
+            yield RoundEvent(
+                info=RoundInfo(
+                    round=rnd, n_candidates=len(candidates),
+                    n_priced=len(fresh), frontier_size=len(frontier),
+                    stable=stable, stats=res.stats,
+                    elapsed_s=res.elapsed_s),
+                frontier=frontier, results=merged)
             if stable:
                 break
             prev_frontier = frontier
             candidates = [nb for rec in frontier
                           for nb in neighborhood(priced_points[rec.index],
                                                  self.space)]
-
-        if merged is None:                     # empty seed
-            merged = SweepResults(records=[])
-        return AdaptiveResult(results=merged, rounds=rounds,
-                              frontier=frontier, objectives=self.objectives,
-                              space_size=len(self.space))

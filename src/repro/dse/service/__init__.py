@@ -1,0 +1,45 @@
+"""repro.dse.service — the DSE engine as a long-running daemon.
+
+The production shape of the Eva-CiM engine (ROADMAP "DSE-as-a-service"):
+instead of every consumer paying a cold process and a private cache, one
+resident :class:`DSEService` owns a warm
+:class:`~repro.dse.engine.AnalysisCache` per backend (optionally over a
+shared persistent :class:`~repro.dse.store.AnalysisStore`) and serves
+sweep/adaptive queries from many concurrent clients over HTTP/JSON:
+
+  * :mod:`.server`       — :class:`DSEService` + stdlib
+    ``ThreadingHTTPServer`` front end; NDJSON-streamed responses
+    (adaptive rounds land line-by-line as they complete); the
+    ``python -m repro.dse.service`` daemon entry point,
+  * :mod:`.singleflight` — the coalescing primitive: concurrent requests
+    whose canonical point keys overlap share one in-flight evaluation,
+  * :mod:`.metrics`      — counters/gauges/latency histograms behind
+    ``GET /metrics`` (cache + store hit rates ride along),
+  * :mod:`.codec`        — JSON request validation ⇄ typed ``SweepSpace``,
+  * :mod:`.client`       — stdlib-only client library
+    (:class:`ServiceClient`), used by ``benchmarks/bench_service.py``.
+
+Quickstart::
+
+    PYTHONPATH=src python -m repro.dse.service --port 8321
+
+    from repro.dse.service import ServiceClient
+    client = ServiceClient("http://127.0.0.1:8321")
+    reply = client.sweep(["KM"], techs=["sram", "fefet"])
+    for event in client.adaptive_events(["KM"], caches=["32K+256K",
+                                                        "64K+2M"]):
+        print(event["event"])      # start, round..., result
+"""
+from repro.dse.service.client import (ServiceClient, ServiceError,
+                                      SweepReply)
+from repro.dse.service.codec import RequestError, parse_request
+from repro.dse.service.metrics import MetricsRegistry
+from repro.dse.service.server import (DSEService, make_server, main,
+                                      running_server)
+from repro.dse.service.singleflight import SingleFlight
+
+__all__ = [
+    "DSEService", "MetricsRegistry", "RequestError", "ServiceClient",
+    "ServiceError", "SingleFlight", "SweepReply", "make_server", "main",
+    "parse_request", "running_server",
+]

@@ -1,0 +1,5 @@
+"""``python -m repro.dse.service`` — run the DSE daemon."""
+from repro.dse.service.server import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""Observability plane of the DSE daemon — counters, gauges, histograms.
+
+Everything the ``/metrics`` endpoint serves is a plain-JSON snapshot of
+this registry plus the live cache/store counters the engine already
+keeps.  The registry is deliberately tiny and stdlib-only:
+
+* :class:`Counter` — monotonic (requests served, points coalesced),
+* :class:`Gauge`   — instantaneous level (requests in flight),
+* :class:`Histogram` — latency distribution: exact count/sum plus
+  p50/p90/p99 estimated from a bounded reservoir of the most recent
+  observations (a daemon cares about *recent* tail latency; an
+  ever-growing exact quantile structure does not pay its way here).
+
+All mutation goes through one registry lock — the hot path is a dict
+lookup and a float add, contention is dwarfed by the work being
+measured.  ``snapshot()`` returns plain ``dict``/``float`` values, so the
+HTTP handler can ``json.dumps`` it directly.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Deque, Dict, List, Optional
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, by: int = 1) -> None:
+        self.value += by
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, by: int = 1) -> None:
+        self.value += by
+
+    def dec(self, by: int = 1) -> None:
+        self.value -= by
+
+    def set(self, value: float) -> None:
+        self.value = value
+
+
+class Histogram:
+    """Latency summary: exact count/sum/max, reservoir quantiles."""
+
+    __slots__ = ("count", "sum", "max", "_recent")
+
+    def __init__(self, reservoir: int = 2048) -> None:
+        self.count = 0
+        self.sum = 0.0
+        self.max = 0.0
+        self._recent: Deque[float] = collections.deque(maxlen=reservoir)
+
+    def observe(self, value: float) -> None:
+        self.count += 1
+        self.sum += value
+        if value > self.max:
+            self.max = value
+        self._recent.append(value)
+
+    def quantile(self, q: float) -> Optional[float]:
+        if not self._recent:
+            return None
+        ordered = sorted(self._recent)
+        idx = min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))
+        return ordered[idx]
+
+    def snapshot(self) -> Dict[str, Optional[float]]:
+        ordered: List[float] = sorted(self._recent)
+
+        def pick(q: float) -> Optional[float]:
+            if not ordered:
+                return None
+            return ordered[min(len(ordered) - 1,
+                               max(0, round(q * (len(ordered) - 1))))]
+
+        return {"count": self.count, "sum": round(self.sum, 6),
+                "mean": round(self.sum / self.count, 6) if self.count else None,
+                "max": round(self.max, 6) if self.count else None,
+                "p50": pick(0.50), "p90": pick(0.90), "p99": pick(0.99)}
+
+
+class MetricsRegistry:
+    """Named metric instruments, created on first use, one lock for all.
+
+    Names are dotted paths (``"requests.sweep"``); ``snapshot()`` nests
+    them back into a JSON-friendly tree, with histograms expanded to
+    their summary dicts and quantiles rounded for readability.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    # ------------------------------------------------------------ access
+    def counter(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter()
+            c.inc(by)
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge()
+            return g
+
+    def gauge_inc(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge()
+            g.inc(by)
+
+    def gauge_dec(self, name: str, by: int = 1) -> None:
+        self.gauge_inc(name, -by)
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram()
+            h.observe(value)
+
+    def counter_value(self, name: str) -> int:
+        with self._lock:
+            c = self._counters.get(name)
+            return c.value if c is not None else 0
+
+    # ---------------------------------------------------------- snapshot
+    @staticmethod
+    def _nest(tree: Dict, name: str, value) -> None:
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+            if not isinstance(node, dict):       # leaf/branch name clash
+                return
+        node[parts[-1]] = value
+
+    def snapshot(self) -> Dict:
+        out: Dict = {}
+        with self._lock:
+            for name, c in sorted(self._counters.items()):
+                self._nest(out, name, c.value)
+            for name, g in sorted(self._gauges.items()):
+                self._nest(out, name, g.value)
+            for name, h in sorted(self._histograms.items()):
+                self._nest(out, name, h.snapshot())
+        return out

@@ -222,3 +222,30 @@ def test_adaptive_respects_explicit_seed_and_universe():
     outside = SweepSpace(workloads=("KM", "NB"))  # KM not in _SPACE
     with pytest.raises(ValueError, match="outside the design space"):
         AdaptiveDSE(_SPACE, engine=DSEEngine()).run(outside)
+
+
+def test_run_iter_streams_the_same_run():
+    """run() is a thin drain of run_iter(): consuming the generator by
+    hand must reproduce the drained result exactly — same rounds, same
+    frontier, same merged records — with each event carrying the frontier
+    as it stood after that round (the DSE service streams these)."""
+    space = SweepSpace(workloads=("NB",),
+                       caches=("32K+256K", "64K+256K"),
+                       cim_levels=("L1_only", "both"),
+                       techs=("sram", "fefet"))
+    drained = AdaptiveDSE(space, engine=DSEEngine()).run()
+
+    events = list(AdaptiveDSE(space, engine=DSEEngine()).run_iter())
+    assert [e.info.round for e in events] == list(range(len(events)))
+    # elapsed_s is wall-clock noise; everything else must match round-for-round
+    assert [(e.info.round, e.info.n_candidates, e.info.n_priced,
+             e.info.frontier_size, e.info.stable) for e in events] == \
+        [(r.round, r.n_candidates, r.n_priced, r.frontier_size, r.stable)
+         for r in drained.rounds]
+    assert [r.config_label for r in events[-1].frontier] == \
+        [r.config_label for r in drained.frontier]
+    assert [r.energy_improvement for r in events[-1].results] == \
+        [r.energy_improvement for r in drained.results]
+    # the merged-results object accumulates: earlier events see prefixes
+    assert len(events[0].results) <= len(events[-1].results)
+    assert events[-1].info.stable or len(events) == 9   # 8 rounds + seed

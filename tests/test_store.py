@@ -1,7 +1,9 @@
 """repro.dse.store: persisted-vs-fresh artifact equality, versioned
-invalidation, corrupted-file recovery, cross-engine zero-rebuild runs, and
+invalidation, corrupted-file recovery, cross-engine zero-rebuild runs,
+concurrent same-key races (one blob, consistent counters), and
 backend-namespaced coexistence (CiM + TPU artifacts in one cache dir)."""
 import pickle
+import threading
 
 import pytest
 
@@ -218,6 +220,76 @@ def test_store_disk_usage_gauges(tmp_path):
     assert res.stats["store_bytes_total"] == usage["store_bytes_total"]
     # gauges live in stats() alongside the counters
     assert store.stats()["store_bytes_layer1"] == usage["store_bytes_layer1"]
+
+
+# ------------------------------------------------------------ concurrency
+def test_concurrent_caches_race_same_key_one_blob(tmp_path):
+    """Two threads — separate caches, separate store handles, one cache
+    dir — race the same layer-1/layer-2 key.  Exactly one valid blob per
+    layer must exist afterwards, both threads must price identically, and
+    the counters must stay consistent (no phantom hits, no corrupt
+    drops)."""
+    barrier = threading.Barrier(2)
+    outcomes, errors = [], []
+
+    def worker():
+        cache = AnalysisCache(store=AnalysisStore(tmp_path))
+        barrier.wait()                      # collide as hard as possible
+        try:
+            an = cache.trace_analysis("NB", CACHE)
+            res, rs = cache.offload("NB", CACHE, CFG)
+            rep = profile_system(cache.trace("NB", CACHE),
+                                 offload=res, reshaped=rs)
+            outcomes.append((len(an.flow.reg_consumers),
+                             rep.energy_improvement, rep.speedup,
+                             cache.trace_builds, cache.offload_builds,
+                             cache.store.corrupt_drops))
+        except Exception as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors
+    assert len(outcomes) == 2
+
+    # both threads computed/loaded the *same* analysis and price
+    assert outcomes[0][:3] == outcomes[1][:3]
+    # each thread built at most once per layer, and nobody saw corruption
+    for _, _, _, trace_builds, offload_builds, corrupt in outcomes:
+        assert trace_builds <= 1 and offload_builds <= 1
+        assert corrupt == 0
+
+    # exactly one blob per artifact on disk (trace npz + flow npz under
+    # layer1, one pickle under layer2), and they are valid: a fresh cache
+    # rebuilds nothing
+    layer1 = sorted(p.name for p in (tmp_path / "layer1").glob("*.npz"))
+    assert len(layer1) == 2                       # <key>.npz + <key>.flow npz
+    assert len({name.split(".")[0] for name in layer1}) == 1   # same key
+    assert len(list((tmp_path / "layer2").glob("*"))) == 1
+    fresh = AnalysisCache(store=AnalysisStore(tmp_path))
+    fresh.trace_analysis("NB", CACHE)
+    fresh.offload("NB", CACHE, CFG)
+    assert fresh.trace_builds == 0 and fresh.offload_builds == 0
+    assert fresh.store.corrupt_drops == 0
+
+
+def test_corrupt_drops_surface_in_engine_stats(tmp_path):
+    """The corrupt-drop counter rides SweepResults.stats, so CLI surfaces
+    (examples/dse_cim.py --cache-dir) and /metrics can report it."""
+    res = DSEEngine(store=tmp_path).run(SweepSpace(workloads=("NB",)))
+    assert res.stats["store_corrupt_drops"] == 0
+
+    (blob,) = (p for p in (tmp_path / "layer1").glob("*.npz")
+               if ".flow" not in p.name)          # the trace artifact
+    blob.write_bytes(b"bit rot")
+    res2 = DSEEngine(store=tmp_path).run(SweepSpace(workloads=("NB",)))
+    assert res2.stats["store_corrupt_drops"] == 1
+    assert res2.stats["trace_builds"] == 1          # rebuilt through the rot
+    assert [r.energy_improvement for r in res2] == \
+        [r.energy_improvement for r in res]
 
 
 # ------------------------------------------------- backend coexistence
