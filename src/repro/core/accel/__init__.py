@@ -1,0 +1,127 @@
+"""Accelerator-resident analysis hot loops (``EVA_CIM_ACCEL={numpy,jax}``).
+
+The two numpy hot loops of the analysis pipeline — the per-geometry cache
+replay (:meth:`repro.core.cache.CacheHierarchy.replay`) and the vectorized
+placement half of Algorithm 1 (:func:`repro.core.offload._place`) — have
+jax twins in this package:
+
+  * :mod:`repro.core.accel.replay` — one jitted ``lax.scan`` over the
+    structural access stream, ``vmap``-ped across every cache geometry of
+    a sweep, reproducing the LRU/MSHR/writeback state machine bit-exactly
+    (columns *and* counters);
+  * :mod:`repro.core.accel.place` — the reduceat/bincount segment
+    reductions of placement as jitted ``segment_max``/``segment_sum`` +
+    sort-based unique counting, with optional Pallas kernels
+    (:mod:`repro.core.accel.pallas_ops`) for the segment-reduce steps.
+
+The numpy implementations stay in place as the reference oracle: the jax
+path is *differentially tested* against them (``tests/test_accel.py``)
+and every consumer falls back to numpy silently when jax is unavailable
+or the trace exceeds the int32 address budget.
+
+Backend selection
+-----------------
+``backend()`` reads the ``EVA_CIM_ACCEL`` environment variable ("numpy"
+by default); :func:`set_backend` / :func:`use_backend` override it
+in-process (tests, benchmarks).  Everything downstream —
+``attach_cache_results``, ``_place``, ``AnalysisCache.replay_group``, the
+engine/service warm paths — consults this one switch, so
+``EVA_CIM_ACCEL=jax`` flips the whole pipeline at once while keeping
+every artifact byte-identical.
+
+Compile accounting
+------------------
+Every jitted entry point registers itself here; :func:`jit_compiles`
+reports the total number of compiled specializations (the sum of the jit
+caches' sizes).  The DSE service exposes it as the ``accel.jit_compiles``
+metric so "a repeated sweep triggers zero recompilations" is observable.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import List, Optional
+
+BACKENDS = ("numpy", "jax")
+ENV_VAR = "EVA_CIM_ACCEL"
+
+_override: Optional[str] = None
+_JITTED: List[object] = []                 # jitted fns, for compile counting
+
+
+def backend() -> str:
+    """The active analysis backend: the in-process override if one is set,
+    else ``$EVA_CIM_ACCEL``, else ``"numpy"``."""
+    name = _override or os.environ.get(ENV_VAR, "numpy") or "numpy"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown {ENV_VAR} backend {name!r}; "
+                         f"known: {BACKENDS}")
+    return name
+
+
+def enabled() -> bool:
+    """True when the jax path should be attempted."""
+    return backend() == "jax"
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Override the env switch in-process (``None`` restores env lookup)."""
+    global _override
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown accel backend {name!r}; known: {BACKENDS}")
+    _override = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped backend override — the differential tests run both sides."""
+    prev = _override
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def register_jitted(fn):
+    """Track a jitted callable for :func:`jit_compiles` accounting."""
+    _JITTED.append(fn)
+    return fn
+
+
+def jit_compiles() -> int:
+    """Total compiled specializations across the accel jit entry points.
+
+    A repeated sweep over the same workloads/geometries must leave this
+    number unchanged — the service's warm-path test asserts exactly that
+    through the ``accel.jit_compiles`` metric."""
+    total = 0
+    for fn in _JITTED:
+        try:
+            total += int(fn._cache_size())
+        except Exception:  # noqa: BLE001 — older jax without _cache_size
+            pass
+    return total
+
+
+def replay_columns(addrs, is_writes, geometries):
+    """Batched replay under the active backend; ``None`` means "use the
+    numpy oracle" (backend is numpy, jax missing, or address overflow)."""
+    if not enabled():
+        return None
+    try:
+        from repro.core.accel.replay import replay_columns_batch
+        return replay_columns_batch(addrs, is_writes, geometries)
+    except ImportError:
+        return None
+
+
+def place_candidates(part, ct, cfg):
+    """Jax placement under the active backend; ``None`` → numpy oracle."""
+    if not enabled():
+        return None
+    try:
+        from repro.core.accel.place import place_candidates_jax
+        return place_candidates_jax(part, ct, cfg)
+    except ImportError:
+        return None

@@ -1,0 +1,99 @@
+"""Pallas segment-reduce kernels for the placement stage.
+
+XLA lowers ``jax.ops.segment_sum``/``segment_max`` to scatter-adds whose
+fusion is poor on TPU (serialized updates through HBM); placement's
+reductions are tiny per segment but numerous, so they are exactly the
+"scatter/segment-reduce steps where XLA fusion falls short" the ROADMAP
+names.  These kernels recast the scatter as a dense one-hot contraction:
+
+  * inputs are reshaped to ``(rows, 128)`` lanes and walked in
+    ``(8, 128)`` blocks (the float32 TPU tile);
+  * the grid is ``(segment_blocks, row_blocks)`` with the row dimension
+    fastest, so each ``(8, 128)``-segment output block is revisited
+    consecutively and accumulated in place (zero/-inf init on the first
+    row block via ``pl.when``);
+  * a block's contribution is ``(vals[:, :, None] * onehot).sum(1)`` —
+    an (8,128)x(128,128) contraction that maps onto the MXU instead of
+    a scatter.
+
+On CPU the kernels run in interpret mode — numerically identical,
+useful only for testing — so the placement kernel enables them when a
+TPU is present or ``EVA_CIM_PALLAS=1`` forces them (the differential
+tests do the latter).  Counts and depths fit int32 exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_SUBLANES = 8
+_BLOCK = _LANES * _SUBLANES
+_NEG = jnp.iinfo(jnp.int32).min
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _seg_kernel(is_max: bool):
+    def kernel(vals_ref, ids_ref, out_ref):
+        j = pl.program_id(0)               # segment block (output column)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, _NEG if is_max else 0)
+
+        v = vals_ref[...].astype(jnp.int32)          # (8, 128)
+        s = ids_ref[...]                             # (8, 128)
+        seg = j * _LANES + jax.lax.broadcasted_iota(jnp.int32, (1, 1, _LANES),
+                                                    2)
+        match = s[:, :, None] == seg                 # (8, 128, 128)
+        if is_max:
+            contrib = jnp.where(match, v[:, :, None], _NEG).max(axis=1)
+            out_ref[...] = jnp.maximum(out_ref[...], contrib)
+        else:
+            out_ref[...] += (v[:, :, None] * match).sum(axis=1)
+    return kernel
+
+
+def _segment_reduce(vals, ids, n_segments: int, is_max: bool):
+    n = vals.shape[0]
+    rows = -(-max(n, 1) // _BLOCK) * _SUBLANES
+    seg_pad = -(-n_segments // _LANES) * _LANES
+    pad = rows * _LANES - n
+    fill = _NEG if is_max else 0
+    v = jnp.pad(vals.astype(jnp.int32), (0, pad),
+                constant_values=fill).reshape(rows, _LANES)
+    s = jnp.pad(ids.astype(jnp.int32), (0, pad),
+                constant_values=0).reshape(rows, _LANES)
+    out = pl.pallas_call(
+        _seg_kernel(is_max),
+        out_shape=jax.ShapeDtypeStruct((_SUBLANES, seg_pad), jnp.int32),
+        grid=(seg_pad // _LANES, rows // _SUBLANES),
+        in_specs=[pl.BlockSpec((_SUBLANES, _LANES), lambda j, i: (i, 0)),
+                  pl.BlockSpec((_SUBLANES, _LANES), lambda j, i: (i, 0))],
+        out_specs=pl.BlockSpec((_SUBLANES, _LANES), lambda j, i: (0, j)),
+        interpret=_interpret(),
+    )(v, s)
+    if is_max:
+        return out.max(axis=0)[:n_segments]
+    return out.sum(axis=0)[:n_segments]
+
+
+def segment_sum(vals, ids, n_segments: int):
+    """``jax.ops.segment_sum`` as a one-hot Pallas contraction.
+
+    Padding lanes carry value 0 into segment 0, so they cancel."""
+    return _segment_reduce(vals, ids, n_segments, is_max=False)
+
+
+def segment_max(vals, ids, n_segments: int):
+    """``jax.ops.segment_max`` as a one-hot Pallas contraction.
+
+    Empty segments come back as INT32_MIN, matching the XLA op's
+    identity; padding lanes carry INT32_MIN into segment 0."""
+    return _segment_reduce(vals, ids, n_segments, is_max=True)

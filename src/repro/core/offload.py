@@ -531,6 +531,11 @@ def _place(part: SelectionPartition, ct: ColumnarTrace,
     protos = part.protos
     if not protos:
         return []
+    from repro.core import accel
+    if accel.enabled():
+        placed = accel.place_candidates(part, ct, cfg)
+        if placed is not None:          # None: int32 overflow -> numpy oracle
+            return placed
     depth_cap = max(_LEVEL_DEPTH[l] for l in cfg.cim_levels)
     enabled = np.asarray(sorted(_LEVEL_DEPTH[l] for l in cfg.cim_levels))
 

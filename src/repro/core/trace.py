@@ -1081,22 +1081,47 @@ def attach_cache_results(st: StructuralTrace,
     hierarchy, producing the per-geometry level/hit/bank/MSHR columns —
     byte-identical to recording the accesses at emission time, at a
     fraction of the cost of re-interpreting the program."""
+    return attach_cache_results_batch(st, [cache_levels])[0]
+
+
+def attach_cache_results_batch(st: StructuralTrace,
+                               geometries: Sequence[Tuple[CacheConfig, ...]]
+                               ) -> List[TraceResult]:
+    """Replay one structural trace under many cache geometries.
+
+    The structural columns are shared; each geometry only needs its own
+    level/hit/bank/MSHR columns.  Under ``EVA_CIM_ACCEL=jax`` every
+    geometry comes out of one batched accelerator replay
+    (:func:`repro.core.accel.replay_columns`, differentially tested
+    bit-exact against :meth:`CacheHierarchy.replay`); the numpy path —
+    and any batch the accelerator declines — replays per geometry."""
+    from repro.core import accel
+
     ct = st.columns
-    hier = CacheHierarchy(cache_levels)
     mem_idx = np.flatnonzero(ct.mem_mask)
-    lvl, hit, bank, mshr = hier.replay(ct.addr[mem_idx],
-                                       ct.op[mem_idx] == OP_STORE)
-    level_col = np.zeros(ct.n, np.int8)
-    hit_col = np.full(ct.n, -1, np.int8)
-    bank_col = np.full(ct.n, -1, np.int16)
-    mshr_col = np.zeros(ct.n, bool)
-    level_col[mem_idx] = lvl
-    hit_col[mem_idx] = hit
-    bank_col[mem_idx] = bank
-    mshr_col[mem_idx] = mshr
-    return TraceResult(ct.with_mem_results(level_col, hit_col, bank_col,
-                                           mshr_col),
-                       hier, st.outputs, structural=st)
+    addrs = ct.addr[mem_idx]
+    is_writes = ct.op[mem_idx] == OP_STORE
+    batched = accel.replay_columns(addrs, is_writes, list(geometries))
+    out = []
+    for gi, cache_levels in enumerate(geometries):
+        hier = CacheHierarchy(cache_levels)
+        if batched is not None and batched[gi] is not None:
+            lvl, hit, bank, mshr, counters = batched[gi]
+            hier.restore_counters(counters)   # sets stay cold, like the
+        else:                                 # store's rehydration path
+            lvl, hit, bank, mshr = hier.replay(addrs, is_writes)
+        level_col = np.zeros(ct.n, np.int8)
+        hit_col = np.full(ct.n, -1, np.int8)
+        bank_col = np.full(ct.n, -1, np.int16)
+        mshr_col = np.zeros(ct.n, bool)
+        level_col[mem_idx] = lvl
+        hit_col[mem_idx] = hit
+        bank_col[mem_idx] = bank
+        mshr_col[mem_idx] = mshr
+        out.append(TraceResult(ct.with_mem_results(level_col, hit_col,
+                                                   bank_col, mshr_col),
+                               hier, st.outputs, structural=st))
+    return out
 
 
 def trace_program(fn: Callable, *args,

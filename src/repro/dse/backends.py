@@ -36,7 +36,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import hashlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 from repro.core.host_model import HostModel
 from repro.core.profiler import profile_system
@@ -106,6 +106,14 @@ class AnalysisBackend(abc.ABC):
         order and exactly one expensive pass per key)."""
         self.analyze(cache, point)
 
+    def warm_many(self, cache, points: Sequence[SweepPoint]) -> None:
+        """Warm one representative point per analysis key.
+
+        The engine hands over the whole key set at once so backends can
+        batch across it; the default is the serial per-key warm."""
+        for p in points:
+            self.warm(cache, p)
+
 
 # ======================================================================
 # CiM — the paper's pipeline, extracted from the engine unchanged
@@ -135,6 +143,21 @@ class CimBackend(AnalysisBackend):
 
     def analyze(self, cache, point: SweepPoint):
         return cache.trace(point.workload, point.cache)
+
+    def warm_many(self, cache, points: Sequence[SweepPoint]) -> None:
+        """Batch the warm pass per workload: under ``EVA_CIM_ACCEL=jax``
+        all cache geometries of one workload replay in a single vmapped
+        kernel launch (:meth:`AnalysisCache.replay_group`)."""
+        from repro.core import accel
+        if accel.enabled() and hasattr(cache, "replay_group"):
+            by_wl: Dict[str, list] = {}
+            for p in points:
+                by_wl.setdefault(p.workload, []).append(p.cache)
+            for wl, caches in by_wl.items():
+                cache.replay_group(wl, caches)
+            return
+        for p in points:
+            self.warm(cache, p)
 
     def select(self, cache, point: SweepPoint, analysis):
         return cache.offload(point.workload, point.cache,

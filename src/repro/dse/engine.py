@@ -58,7 +58,8 @@ from repro.core.offload import (OffloadConfig, OffloadResult, TraceAnalysis,
                                 analyze_trace, rehydrate_analysis)
 from repro.core.reshape import ReshapedTrace, reshape
 from repro.core.trace import (StructuralTrace, TraceResult,
-                              attach_cache_results, trace_structural)
+                              attach_cache_results,
+                              attach_cache_results_batch, trace_structural)
 from repro.dse.backends import AnalysisBackend, CimBackend
 from repro.dse.results import SweepRecord, SweepResults
 from repro.dse.space import CacheOption, SweepPoint, SweepSpace
@@ -97,6 +98,7 @@ class AnalysisCache:
         self.trace_hits = 0
         self.offload_builds = 0
         self.offload_hits = 0
+        self.replay_batches = 0
 
     def _key_lock(self, key: Tuple) -> threading.Lock:
         """Per-key build lock: concurrent misses on one key build once."""
@@ -171,6 +173,72 @@ class AnalysisCache:
                 return tr
             finally:
                 self._prune_lock(key)
+
+    def replay_group(self, workload: str,
+                     caches: Sequence[CacheOption]) -> None:
+        """Warm layer 1 for every geometry of one workload at once.
+
+        The numpy path (or a single-geometry group) degrades to per-key
+        :meth:`trace` calls.  Under ``EVA_CIM_ACCEL=jax`` all geometries
+        still missing from memo *and* store are replayed in ONE batched
+        accelerator call (:func:`~repro.core.trace.attach_cache_results_batch`
+        vmaps the cache state machine across the batch), so a sweep's N
+        geometries cost one kernel launch instead of N replays —
+        ``replay_batches`` counts those launches.  Counter semantics match
+        :meth:`trace`: memo hits bump ``trace_hits``, store loads bump
+        neither, and each geometry actually replayed bumps
+        ``trace_builds``."""
+        uniq: List[CacheOption] = []
+        seen = set()
+        for c in caches:
+            if c.levels not in seen:
+                seen.add(c.levels)
+                uniq.append(c)
+        from repro.core import accel
+        if not accel.enabled() or len(uniq) <= 1:
+            for c in uniq:
+                self.trace(workload, c)
+            return
+        gkey = ("replay_group", workload) + tuple(c.levels for c in uniq)
+        with self._key_lock(gkey):
+            try:
+                missing: List[CacheOption] = []
+                for c in uniq:
+                    key = (workload, c.levels)
+                    with self._lock:
+                        if key in self._traces:
+                            self.trace_hits += 1
+                            continue
+                    if self.store is not None:
+                        loaded = self.store.load_layer1(workload, c.levels)
+                        if loaded is not None:
+                            tr, flow = loaded
+                            with self._lock:
+                                self._traces[key] = tr
+                                if tr.structural is not None \
+                                        and workload not in self._structural:
+                                    self._structural[workload] = tr.structural
+                                if flow is not None \
+                                        and key not in self._analyses:
+                                    self._analyses[key] = \
+                                        rehydrate_analysis(tr, flow)
+                            continue
+                    missing.append(c)
+                if not missing:
+                    return
+                st = self._structural_trace(workload)
+                trs = attach_cache_results_batch(st,
+                                                 [c.levels for c in missing])
+                with self._lock:
+                    self.trace_builds += len(missing)
+                    self.replay_batches += 1
+                    for c, tr in zip(missing, trs):
+                        self._traces[(workload, c.levels)] = tr
+                if self.store is not None:
+                    for c, tr in zip(missing, trs):
+                        self.store.save_layer1(workload, c.levels, tr)
+            finally:
+                self._prune_lock(gkey)
 
     def trace_analysis(self, workload: str, cache: CacheOption
                        ) -> TraceAnalysis:
@@ -281,7 +349,8 @@ class AnalysisCache:
         out = {"trace_builds": self.trace_builds,
                "trace_hits": self.trace_hits,
                "offload_builds": self.offload_builds,
-               "offload_hits": self.offload_hits}
+               "offload_hits": self.offload_hits,
+               "replay_batches": self.replay_batches}
         if self.store is not None:
             out.update(self.store.stats())
         return out
@@ -456,9 +525,12 @@ class DSEEngine:
                 self.analysis.store.invalidate_usage_cache()
         else:
             # warm the analysis cache serially (deterministic build order,
-            # exactly one expensive analysis pass per key), then fan out
-            for chunk in self._chunks(points):
-                self.backend.warm(self.analysis, chunk[0])
+            # exactly one expensive analysis pass per key), then fan out;
+            # the backend sees the whole key set at once so it can batch —
+            # under EVA_CIM_ACCEL=jax the CiM warm path replays all of a
+            # workload's geometries in one vmapped kernel launch
+            self.backend.warm_many(self.analysis,
+                                   [c[0] for c in self._chunks(points)])
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 for rec in pool.map(self.evaluate, points):
                     records[rec.index] = rec

@@ -225,7 +225,11 @@ class DSEService:
                     "builds": builds, "hits": hits,
                     "hit_rate": (round(hits / (hits + builds), 3)
                                  if hits + builds else None)}
+            layers["replay_batches"] = stats.get("replay_batches", 0)
             doc["cache"][name] = layers
+        from repro.core import accel
+        doc["accel"] = {"backend": accel.backend(),
+                        "jit_compiles": accel.jit_compiles()}
         if self.store is not None:
             doc["store"] = self.store.stats()
             doc["store"]["corrupt_drops"] = self.store.corrupt_drops

@@ -90,3 +90,46 @@ def test_property_l1_matches_reference_lru(lines, shape):
         assert (got.level == "L1") == exp_hit
     st_ = h.stats()["L1"]
     assert st_["hits"] + st_["misses"] == len(lines)
+
+
+# ----------------------------------------------------------------------
+# batched replay memoization (PR-7 satellite): one kernel launch serves
+# every geometry of a sweep through AnalysisCache.replay_group
+# ----------------------------------------------------------------------
+def test_replay_group_batches_once():
+    from repro.core import accel
+    from repro.dse.engine import AnalysisCache
+    from repro.dse.space import CacheOption
+
+    cache = AnalysisCache()
+    caches = [CacheOption.of(n)
+              for n in ("32K+256K", "64K+256K", "64K+2M")]
+    with accel.use_backend("jax"):
+        cache.replay_group("NB", caches)
+        # all three geometries built, ONE batched replay launch
+        assert cache.trace_builds == 3
+        assert cache.trace_hits == 0
+        assert cache.replay_batches == 1
+        # the per-point path now memo-hits every geometry
+        for c in caches:
+            cache.trace("NB", c)
+        assert cache.trace_builds == 3
+        assert cache.trace_hits == 3
+        # a repeated sweep's warm pass does no replay work at all
+        cache.replay_group("NB", caches)
+        assert cache.trace_builds == 3
+        assert cache.replay_batches == 1
+    assert cache.stats()["replay_batches"] == 1
+
+
+def test_replay_group_numpy_backend_degrades_to_trace():
+    from repro.core import accel
+    from repro.dse.engine import AnalysisCache
+    from repro.dse.space import CacheOption
+
+    cache = AnalysisCache()
+    caches = [CacheOption.of(n) for n in ("32K+256K", "64K+256K")]
+    with accel.use_backend("numpy"):
+        cache.replay_group("NB", caches)
+    assert cache.trace_builds == 2
+    assert cache.replay_batches == 0        # no batched launch on numpy

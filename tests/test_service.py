@@ -388,3 +388,39 @@ def test_store_metrics_and_corrupt_drops_surface(tmp_path):
         doc = client.metrics()
         assert doc["store"]["corrupt_drops"] == 1
         assert doc["store"]["store_corrupt_drops"] == 1
+
+
+def test_jax_backend_zero_recompiles(daemon):
+    """ISSUE 7 satellite: under EVA_CIM_ACCEL=jax the daemon batches every
+    geometry of a sweep into one replay launch, /metrics exposes the accel
+    counters, and repeated sweeps — even through a COLD cache re-replaying
+    the same shapes — add zero compiled specializations."""
+    from repro.core import accel
+    from repro.dse.engine import AnalysisCache
+    from repro.dse.space import CacheOption
+
+    _url, client, _service = daemon
+    req = dict(caches=["32K+256K", "64K+256K", "64K+2M"], techs=["sram"])
+    with accel.use_backend("jax"):
+        client.sweep(["KM"], **req)                    # cold: compiles
+        m1 = client.metrics()
+        assert m1["accel"]["backend"] == "jax"
+        compiles = m1["accel"]["jit_compiles"]
+        assert compiles > 0
+        assert m1["cache"]["cim"]["replay_batches"] >= 1
+
+        client.sweep(["KM"], **req)                    # warm repeat
+        m2 = client.metrics()
+        assert m2["accel"]["jit_compiles"] == compiles
+        assert (m2["cache"]["cim"]["replay_batches"]
+                == m1["cache"]["cim"]["replay_batches"])
+
+        # stronger than a memo hit: a fresh cache re-REPLAYS the sweep's
+        # geometry batch and still reuses every compiled kernel
+        fresh = AnalysisCache()
+        fresh.replay_group("KM",
+                           [CacheOption.of(n) for n in req["caches"]])
+        assert fresh.replay_batches == 1
+        assert accel.jit_compiles() == compiles
+    m3 = client.metrics()
+    assert m3["accel"]["backend"] == "numpy"           # override restored
