@@ -53,8 +53,9 @@ cache dir, adaptive refinement, reports — behaves identically::
 import argparse
 import sys
 
-from repro.dse import (AdaptiveDSE, DSEEngine, HOST_PRESETS, SweepSpace,
-                       TPU_PRESETS, TpuBackend, TpuOption, parse_bytes)
+from repro.dse import (AdaptiveDSE, DSEEngine, HOST_PRESETS, StoreFormatError,
+                       SweepSpace, TPU_PRESETS, TpuBackend, TpuOption,
+                       parse_bytes)
 from repro.workloads import WORKLOADS
 
 
@@ -115,7 +116,11 @@ def main(argv=None) -> int:
     if args.workload not in WORKLOADS:
         ap.error(f"unknown workload {args.workload!r}; "
                  f"known: {sorted(WORKLOADS)}")
-    engine = DSEEngine(executor=args.executor, store=args.cache_dir)
+    try:
+        engine = DSEEngine(executor=args.executor, store=args.cache_dir)
+    except StoreFormatError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
     hosts = tuple(args.hosts.split(",")) if args.hosts else (None,)
     space = SweepSpace(workloads=(args.workload,),
                        caches=("32K+256K", "64K+256K", "64K+2M"),
@@ -249,8 +254,12 @@ def _tpu_main(args) -> int:
               f"comma-separated byte counts like 16K,64K,1M")
         return 1
     tpus = [TpuOption(TPU_PRESETS[c], t) for c in chips for t in thresholds]
-    engine = DSEEngine(executor=args.executor, store=args.cache_dir,
-                       backend=TpuBackend())
+    try:
+        engine = DSEEngine(executor=args.executor, store=args.cache_dir,
+                           backend=TpuBackend())
+    except StoreFormatError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
     space = SweepSpace(workloads=(workload,), tpus=tuple(tpus))
     print(f"== {workload}: {len(space)} design points, "
           f"1 jaxpr/HLO analysis ==")

@@ -82,8 +82,8 @@ class CheckpointManager:
         self.keep = keep
         self.every = every
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
-        self._pending: Optional[concurrent.futures.Future] = None
         self._lock = threading.Lock()
+        self._pending: Optional[concurrent.futures.Future] = None  # lint: guarded-by(_lock)
 
     # -------------------------------------------------------------- save
     def maybe_save(self, step: int, state: Any, *, force: bool = False) -> bool:
@@ -91,7 +91,9 @@ class CheckpointManager:
             return False
         host_state = jax.tree_util.tree_map(np.asarray, state)  # snapshot now
         self.wait()                                       # one in flight max
-        self._pending = self._pool.submit(self._save_and_gc, step, host_state)
+        with self._lock:
+            self._pending = self._pool.submit(self._save_and_gc, step,
+                                              host_state)
         return True
 
     def _save_and_gc(self, step: int, state: Any) -> None:
@@ -103,9 +105,13 @@ class CheckpointManager:
                 (self.dir / f"{s}.npz").unlink(missing_ok=True)
 
     def wait(self) -> None:
-        if self._pending is not None:
-            self._pending.result()
-            self._pending = None
+        # take the future under the lock, but block on it outside:
+        # _save_and_gc acquires the same lock on the pool thread, so
+        # holding it across .result() would deadlock
+        with self._lock:
+            pending, self._pending = self._pending, None
+        if pending is not None:
+            pending.result()
 
     # ------------------------------------------------------------ resume
     def restore_latest(self, template: Any) -> Tuple[Optional[int], Any]:

@@ -84,6 +84,7 @@ def _segment_reduce(vals, ids, n_segments: int, is_max: bool):
     return out.sum(axis=0)[:n_segments]
 
 
+# lint: numpy-twin(jax.ops.segment_sum)
 def segment_sum(vals, ids, n_segments: int):
     """``jax.ops.segment_sum`` as a one-hot Pallas contraction.
 
@@ -91,6 +92,7 @@ def segment_sum(vals, ids, n_segments: int):
     return _segment_reduce(vals, ids, n_segments, is_max=False)
 
 
+# lint: numpy-twin(jax.ops.segment_max)
 def segment_max(vals, ids, n_segments: int):
     """``jax.ops.segment_max`` as a one-hot Pallas contraction.
 

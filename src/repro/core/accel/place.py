@@ -140,6 +140,7 @@ def _flat_arrays(part, ct, cfg):
     return flat
 
 
+# lint: numpy-twin(repro.core.offload:_place)
 def place_candidates_jax(part, ct, cfg) -> Optional[List]:
     """``_place`` on the jax backend; ``None`` -> use the numpy oracle."""
     from repro.core.offload import _DEPTH_LEVEL, _LEVEL_DEPTH, Candidate
@@ -150,12 +151,16 @@ def place_candidates_jax(part, ct, cfg) -> Optional[List]:
     if not protos:
         return []
     leaf_seq, leaf_pid, acc_seq, acc_pid = _flat_arrays(part, ct, cfg)
-    acc_addr = ct.addr[acc_seq]
-    if len(acc_addr) and (acc_addr.min() < 0
-                          or acc_addr.max() // 64 >= _I32_LIM):
-        return None
-
     n_seg = len(protos)
+    acc_addr = ct.addr[acc_seq]
+    # int32 budget guard over the *real* access rows only: padding rows
+    # carry the sentinel pid and gather ct.addr[0], which is -1 whenever
+    # seq 0 is not a memory access — the kernel masks them out, so they
+    # must not veto the jax path
+    real_addr = acc_addr[acc_pid < n_seg]
+    if len(real_addr) and (real_addr.min() < 0
+                           or real_addr.max() // 64 >= _I32_LIM):
+        return None
     depth_cap = max(_LEVEL_DEPTH[l] for l in cfg.cim_levels)
     enabled = tuple(sorted(_LEVEL_DEPTH[l] for l in cfg.cim_levels))
     fn = _build(len(leaf_seq), len(acc_seq), _pow2(n_seg + 1),

@@ -198,6 +198,7 @@ def _build(L: int, S: int, A: int, M: int):
     return register_jitted(fn)
 
 
+# lint: numpy-twin(repro.core.cache:CacheHierarchy.replay, batched)
 def replay_columns_batch(addrs, is_writes,
                          geometries: Sequence[Tuple[CacheConfig, ...]]
                          ) -> Optional[List[tuple]]:

@@ -53,11 +53,13 @@ from repro.dse.space import (CACHE_PRESETS, CIM_SETS, LEVEL_PRESETS,
                              CacheOption, HostOption, SweepPoint, SweepSpace,
                              TpuOption, neighborhood, parse_bytes,
                              tpu_neighbors)
-from repro.dse.store import AnalysisStore, workload_fingerprint
+from repro.dse.store import (AnalysisStore, StoreFormatError,
+                             workload_fingerprint)
 
 __all__ = [
     "AdaptiveDSE", "AdaptiveResult", "AnalysisBackend", "AnalysisCache",
     "AnalysisStore", "CimBackend", "DSEEngine", "RoundEvent", "RoundInfo",
+    "StoreFormatError",
     "TpuBackend",
     "TpuSelection", "TpuWorkloadAnalysis", "arch_fingerprint", "coarse_seed",
     "dominates", "frontier_stable", "neighborhood", "objective_vector",

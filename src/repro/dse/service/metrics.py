@@ -99,9 +99,9 @@ class MetricsRegistry:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._counters: Dict[str, Counter] = {}
-        self._gauges: Dict[str, Gauge] = {}
-        self._histograms: Dict[str, Histogram] = {}
+        self._counters: Dict[str, Counter] = {}      # lint: guarded-by(_lock)
+        self._gauges: Dict[str, Gauge] = {}          # lint: guarded-by(_lock)
+        self._histograms: Dict[str, Histogram] = {}  # lint: guarded-by(_lock)
 
     # ------------------------------------------------------------ access
     def counter(self, name: str, by: int = 1) -> None:

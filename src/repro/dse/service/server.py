@@ -100,7 +100,7 @@ class DSEService:
         self.memo_limit = memo_limit
         self._singleflight = SingleFlight()
         self._memo_lock = threading.Lock()
-        self._memo: Dict[Tuple, SweepRecord] = {}
+        self._memo: Dict[Tuple, SweepRecord] = {}  # lint: guarded-by(_memo_lock)
         self._backends: Dict[str, AnalysisBackend] = {"cim": CimBackend(),
                                                       "tpu": TpuBackend()}
         self._caches: Dict[str, AnalysisCache] = {

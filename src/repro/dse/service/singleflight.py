@@ -45,9 +45,9 @@ class SingleFlight:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._flights: Dict[Hashable, _Flight] = {}
-        self.started = 0
-        self.coalesced = 0
+        self._flights: Dict[Hashable, _Flight] = {}  # lint: guarded-by(_lock)
+        self.started = 0     # lint: guarded-by(_lock)
+        self.coalesced = 0   # lint: guarded-by(_lock)
 
     def do(self, key: Hashable,
            fn: Callable[[], Any]) -> Tuple[Any, bool]:

@@ -81,6 +81,15 @@ STORE_FORMAT = 2
 # Bump when the layer-1 .npz column encoding changes.
 NPZ_FORMAT = 1
 
+
+class StoreFormatError(RuntimeError):
+    """The cache directory was written by a *newer* ``STORE_FORMAT``.
+
+    Older artifacts under a new reader are individually dropped by the
+    per-file format stamp; a newer directory under an old reader would be
+    silently treated as 100% misses and then *overwritten*, destroying
+    the newer build's cache — so that case refuses to open instead."""
+
 _FINGERPRINTS: Dict[str, str] = {}
 
 
@@ -139,18 +148,43 @@ class AnalysisStore:
                  version: int = TRACE_VM_VERSION):
         self.root = pathlib.Path(root).expanduser()
         self.version = int(version)
+        self._check_format_marker()
         for layer in ("layer1", "layer2"):
             (self.root / layer).mkdir(parents=True, exist_ok=True)
         # counters are shared by thread-pool sweeps and asserted on exactly
         # by tests/CI, so increments go through a lock
         self._stats_lock = threading.Lock()
-        self._usage_cache: Optional[Dict[str, int]] = None
-        self.l1_hits = 0
-        self.l1_misses = 0
-        self.l2_hits = 0
-        self.l2_misses = 0
-        self.writes = 0
-        self.corrupt_drops = 0
+        self._usage_cache: Optional[Dict[str, int]] = None  # lint: guarded-by(_stats_lock)
+        self.l1_hits = 0            # lint: guarded-by(_stats_lock)
+        self.l1_misses = 0          # lint: guarded-by(_stats_lock)
+        self.l2_hits = 0            # lint: guarded-by(_stats_lock)
+        self.l2_misses = 0          # lint: guarded-by(_stats_lock)
+        self.writes = 0             # lint: guarded-by(_stats_lock)
+        self.corrupt_drops = 0      # lint: guarded-by(_stats_lock)
+
+    def _check_format_marker(self) -> None:
+        """Refuse directories written by a newer STORE_FORMAT; (re)stamp
+        the marker otherwise.  An unreadable marker counts as absent —
+        the per-artifact format stamps still protect every load."""
+        marker = self.root / "FORMAT.json"
+        written: Optional[int] = None
+        try:
+            written = int(json.loads(marker.read_text())["store_format"])
+        except (OSError, ValueError, KeyError, TypeError):
+            written = None
+        if written is not None and written > STORE_FORMAT:
+            raise StoreFormatError(
+                f"cache directory {self.root} was written by STORE_FORMAT="
+                f"{written}, but this build reads STORE_FORMAT="
+                f"{STORE_FORMAT}. Upgrade this build, or point --cache-dir "
+                f"at a fresh directory (reusing it here would overwrite "
+                f"the newer build's artifacts).")
+        if written != STORE_FORMAT:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump({"store_format": STORE_FORMAT}, f)
+            os.replace(tmp, marker)
 
     def _bump(self, counter: str, by: int = 1) -> None:
         with self._stats_lock:
@@ -416,7 +450,8 @@ class AnalysisStore:
         path (run deltas, worker-chunk deltas) stay O(1); another
         process's concurrent writes surface on this handle's next write
         or a fresh ``AnalysisStore``."""
-        cached = self._usage_cache
+        with self._stats_lock:
+            cached = self._usage_cache
         if cached is not None:
             return dict(cached)
         out = {"store_bytes_total": 0, "store_bytes_layer1": 0,
@@ -441,7 +476,10 @@ class AnalysisStore:
                     backend = "unknown"
                 bkey = f"store_bytes_{backend}"
                 out[bkey] = out.get(bkey, 0) + sz
-        self._usage_cache = dict(out)
+        # publish under the lock: a concurrent _bump() invalidation must
+        # not lose against this (possibly stale) walk result being cached
+        with self._stats_lock:
+            self._usage_cache = dict(out)
         return out
 
     def stats(self) -> Dict[str, int]:

@@ -1,0 +1,24 @@
+"""Static invariant checks for the Eva-CiM repro codebase.
+
+``python -m repro.lint`` runs four ast-based checkers — see
+``docs/architecture.md`` ("Static invariants") for the full contract:
+
+* **version-integrity** — normalized AST fingerprints of the code
+  behind each cache version constant, against a committed manifest;
+* **jit-purity** — no Python side effects inside jitted/scanned bodies;
+* **accel-parity** — every public ``core/accel`` kernel declares a
+  numpy twin with a matching signature and a differential test;
+* **thread-safety** — ``# lint: guarded-by(<lock>)`` attributes are
+  only written under their lock, and locks nest in one global order.
+
+Stdlib-only by design: the CI lint job runs before dependencies are
+installed.
+"""
+from repro.lint.core import (  # noqa: F401
+    CHECKERS,
+    Finding,
+    LintReport,
+    REPO_ROOT,
+    load_baseline,
+    run_checkers,
+)

@@ -1,0 +1,227 @@
+"""jit-purity checker: no Python side effects inside traced functions.
+
+Anything passed through ``jax.jit`` / ``accel.register_jitted`` /
+``lax.scan`` runs *once* at trace time; Python-level effects in the body
+are baked into the compiled artifact or silently skipped on cache hits.
+The classic bugs this catches:
+
+* ``time.*`` / ``datetime.now`` / ``random.*`` / ``np.random.*`` — the
+  value is frozen at trace time, every later call reuses it;
+* ``os.environ`` / ``os.getenv`` — config reads that don't retrigger
+  compilation when the env changes (read env *outside* the kernel and
+  pass the result in, as ``place._use_pallas`` does);
+* ``print`` / ``open`` — effects that happen once, not per call;
+* ``.item()`` / ``np.asarray(...)`` on traced values — host syncs that
+  either fail under jit or force a device round-trip;
+* mutable default arguments — unhashable, so they break jit's
+  signature-based compile cache.
+
+Detection is name-based and conservative: we only inspect functions we
+can *see* flowing into a jit entry point (decorator or call), resolving
+through the wrapper idioms this codebase uses
+(``register_jitted(jax.jit(jax.vmap(f, ...)))``, ``functools.partial``).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.lint.core import Finding, file_comments, is_disabled, parse_file, rel, register
+
+# call/decorator heads that mark their first argument (or the decorated
+# function) as traced
+_JIT_WRAPPERS = {"jax.jit", "jit", "register_jitted",
+                 "accel.register_jitted"}
+_SCAN_HEADS = {"lax.scan", "jax.lax.scan"}
+_PALLAS_HEADS = {"pl.pallas_call", "pallas_call", "pltpu.pallas_call"}
+# transparent wrappers: unwrap to their first positional argument
+_TRANSPARENT = {"jax.vmap", "vmap", "jax.pmap", "pmap",
+                "functools.partial", "partial", "jax.checkpoint",
+                "jax.remat"} | _JIT_WRAPPERS
+
+_RANDOM_PREFIXES = ("random.", "np.random.", "numpy.random.", "onp.random.")
+_TIME_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+               "time.process_time", "time.time_ns", "time.sleep"}
+_HOST_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array", "onp.asarray", "onp.array", "float",
+                    "int"}  # float()/int() on traced values also sync
+_ENV_CALLS = {"os.getenv", "os.environ.get"}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _first_pos_arg(call: ast.Call) -> Optional[ast.expr]:
+    return call.args[0] if call.args else None
+
+
+def _unwrap(expr: ast.expr) -> Optional[ast.expr]:
+    """Chase ``register_jitted(jax.jit(jax.vmap(f, ...)))`` down to f."""
+    seen = 0
+    while isinstance(expr, ast.Call) and seen < 8:
+        head = dotted(expr.func)
+        if head in _TRANSPARENT:
+            nxt = _first_pos_arg(expr)
+            if nxt is None:
+                return None
+            expr, seen = nxt, seen + 1
+        else:
+            return expr
+    return expr
+
+
+class _DefIndex(ast.NodeVisitor):
+    """name -> [def nodes] over the whole file (scope-insensitive; good
+    enough for lint — a shadowed name just gets both candidates checked)."""
+
+    def __init__(self) -> None:
+        self.defs: Dict[str, List[ast.AST]] = {}
+
+    def visit_FunctionDef(self, node):
+        self.defs.setdefault(node.name, []).append(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _jit_targets(tree: ast.Module,
+                 index: Dict[str, List[ast.AST]]) -> Iterable[Tuple[ast.AST, str]]:
+    """Yield (function node, how-it-got-jitted) pairs."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                head = dotted(dec)
+                if head is None and isinstance(dec, ast.Call):
+                    head = dotted(dec.func)
+                    # functools.partial(jax.jit, ...) as a decorator
+                    if head in {"functools.partial", "partial"}:
+                        inner = _first_pos_arg(dec)
+                        head = dotted(inner) if inner is not None else None
+                if head in _JIT_WRAPPERS:
+                    yield node, f"@{head}"
+        elif isinstance(node, ast.Call):
+            head = dotted(node.func)
+            if head in _JIT_WRAPPERS | _SCAN_HEADS | _PALLAS_HEADS:
+                arg = _first_pos_arg(node)
+                if arg is None:
+                    continue
+                resolved = _unwrap(arg)
+                if resolved is None:
+                    continue
+                if isinstance(resolved, ast.Lambda):
+                    yield resolved, f"{head}(<lambda>)"
+                elif isinstance(resolved, ast.Name):
+                    for d in index.get(resolved.id, ()):
+                        yield d, f"{head}({resolved.id})"
+
+
+def _impurities(fn: ast.AST) -> Iterable[Tuple[int, str]]:
+    """(line, message) for each side effect in a traced body."""
+    # unhashable defaults break jit's compile cache
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        args = fn.args
+        for default in list(args.defaults) + [d for d in args.kw_defaults
+                                              if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                yield (default.lineno,
+                       "mutable default argument in a jitted function "
+                       "(unhashable; breaks the compile cache)")
+            elif (isinstance(default, ast.Call)
+                  and dotted(default.func) in {"list", "dict", "set"}):
+                yield (default.lineno,
+                       "mutable default argument in a jitted function "
+                       "(unhashable; breaks the compile cache)")
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Global):
+                yield (node.lineno,
+                       "`global` statement inside a jitted function")
+            elif isinstance(node, ast.Subscript):
+                if dotted(node.value) == "os.environ":
+                    yield (node.lineno,
+                           "os.environ read inside a jitted function "
+                           "(frozen at trace time; read it outside and "
+                           "pass the value in)")
+            elif isinstance(node, ast.Call):
+                head = dotted(node.func)
+                if head is None:
+                    if (isinstance(node.func, ast.Attribute)
+                            and node.func.attr == "item"):
+                        yield (node.lineno,
+                               ".item() host sync inside a jitted function")
+                    continue
+                if head in _TIME_CALLS or head.startswith("datetime."):
+                    yield (node.lineno,
+                           f"{head}() inside a jitted function is frozen "
+                           f"at trace time")
+                elif head.startswith(_RANDOM_PREFIXES):
+                    yield (node.lineno,
+                           f"{head}() inside a jitted function is frozen "
+                           f"at trace time (use jax.random with an "
+                           f"explicit key)")
+                elif head in _ENV_CALLS:
+                    yield (node.lineno,
+                           f"{head}() inside a jitted function (frozen at "
+                           f"trace time; read env outside and pass the "
+                           f"value in)")
+                elif head in {"print", "open"}:
+                    yield (node.lineno,
+                           f"{head}() inside a jitted function runs at "
+                           f"trace time only (use jax.debug.print for "
+                           f"per-call output)")
+                elif head in _HOST_SYNC_CALLS and head not in {"float",
+                                                               "int"}:
+                    yield (node.lineno,
+                           f"{head}() on a traced value is a host sync "
+                           f"inside a jitted function")
+                elif head.endswith(".item"):
+                    yield (node.lineno,
+                           ".item() host sync inside a jitted function")
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> List[Finding]:
+    tree = parse_file(path)
+    indexer = _DefIndex()
+    indexer.visit(tree)
+    comments = file_comments(path)
+    rpath = rel(path, root)
+    seen: Set[Tuple[str, int, str]] = set()
+    out: List[Finding] = []
+    done_fns: Set[int] = set()
+    for fn, how in _jit_targets(tree, indexer.defs):
+        if id(fn) in done_fns:
+            continue
+        done_fns.add(id(fn))
+        name = getattr(fn, "name", "<lambda>")
+        for line, msg in _impurities(fn):
+            key = (rpath, line, msg)
+            if key in seen or is_disabled(comments, line, "jit-purity"):
+                continue
+            seen.add(key)
+            out.append(Finding(
+                checker="jit-purity", path=rpath, line=line,
+                symbol=f"{name}:{msg.split(' ', 1)[0]}",
+                message=f"{msg} [{name} jitted via {how}]"))
+    return out
+
+
+@register("jit-purity")
+def check_jit_purity(root: pathlib.Path) -> List[Finding]:
+    findings: List[Finding] = []
+    src = root / "src" / "repro"
+    for path in sorted(src.rglob("*.py")):
+        if "lint" in path.relative_to(src).parts:
+            continue
+        findings.extend(check_file(path, root))
+    return findings

@@ -223,6 +223,38 @@ def test_nb_fig14_geometries_bit_exact():
         assert rep_np.macr == rep_j.macr
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 24), st.integers(0, 5), st.sampled_from(_OPS),
+       st.sampled_from(GEOMETRIES), st.sampled_from(CFGS))
+def test_place_candidates_jax_differential(n, seed, op1, geo, cfg):
+    """place_candidates_jax vs its numpy twin ``offload._place``, called
+    directly on the same structural partition (not through the backend
+    switch) — identical candidate tuples in identical order."""
+    from repro.core.accel.place import place_candidates_jax
+    from repro.core.idg import IDGBuilder
+    from repro.core.offload import _partition, _place, build_flow_index
+
+    if len(geo) == 1 and "L2" in cfg.cim_levels:
+        cfg = CFGS[1]
+    r = np.random.default_rng(seed + 13)
+    a = jnp.asarray(r.integers(0, 100, (n,)), jnp.int32)
+    b = jnp.asarray(r.integers(1, 100, (n,)), jnp.int32)
+    f1 = getattr(jnp, _JNP_OP[op1])
+
+    def prog(a, b):
+        c = f1(a, b)
+        return jnp.sum(c ^ a) + jnp.max(c)
+
+    struct = trace_structural(prog, a, b)
+    ct = attach_cache_results(struct, geo).trace
+    part = _partition(ct, IDGBuilder(ct), build_flow_index(ct), cfg)
+    with accel.use_backend("numpy"):
+        ref = _place(part, ct, cfg)
+    got = place_candidates_jax(part, ct, cfg)
+    assert got is not None
+    assert [_cand_tuple(c) for c in got] == [_cand_tuple(c) for c in ref]
+
+
 def test_backend_switch():
     """Env-var default, in-process override, and validation."""
     assert accel.backend() in ("numpy", "jax")

@@ -1,0 +1,486 @@
+"""Tests for the ``repro.lint`` static-analysis framework (PR-8 tentpole).
+
+Each checker gets at least one fixture it must *flag* and one it must
+*pass*, built as throwaway repo trees under ``tmp_path`` so the checkers
+run exactly as they do against the real tree.  Two tree-level contracts
+ride along: the committed manifest must match the current source (the
+CI lint job's core guarantee), and a full ``run_checkers()`` over the
+repo must come back clean.
+"""
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.lint import core as lint_core
+from repro.lint import fingerprint as fp
+from repro.lint.core import REPO_ROOT, load_baseline, run_checkers
+from repro.lint.jit_purity import check_file as jit_check_file
+from repro.lint.parity import check_parity
+from repro.lint.threads import check_threads
+
+
+def _write(root: pathlib.Path, relpath: str, source: str) -> pathlib.Path:
+    path = root / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return path
+
+
+# ======================================================================
+# version-integrity
+# ======================================================================
+_OFFLOAD_STUB = '''
+    """Selection stub."""
+    ANALYSIS_VERSION = 2
+
+    def _place(protos, levels):
+        depth_cap = max(levels)
+        return [min(p, depth_cap) for p in protos]
+'''
+
+
+def _layer_tree(tmp_path: pathlib.Path) -> pathlib.Path:
+    """A minimal repo tree containing every fingerprinted layer module."""
+    root = tmp_path / "repo"
+    _write(root, "src/repro/core/trace.py",
+           "TRACE_VM_VERSION = 2\ndef trace(p):\n    return p + 1\n")
+    _write(root, "src/repro/core/columnar.py", "COLS = ('level', 'hit')\n")
+    _write(root, "src/repro/core/isa.py", "OP_LOAD = 1\n")
+    _write(root, "src/repro/core/offload.py", _OFFLOAD_STUB)
+    _write(root, "src/repro/core/idg.py", "def build(t):\n    return t\n")
+    _write(root, "src/repro/core/reshape.py", "def reshape(t):\n    return t\n")
+    _write(root, "src/repro/dse/backends.py", '''
+        TPU_ANALYSIS_VERSION = 1
+
+        class CimBackend:
+            def evaluate(self, point):
+                return point
+
+        class TpuCandidate:
+            pass
+
+        class TpuWorkloadAnalysis:
+            pass
+
+        class TpuSelection:
+            pass
+
+        class TpuBackend:
+            def evaluate(self, point):
+                return point
+
+        def arch_fingerprint(workload):
+            return workload
+    ''')
+    _write(root, "src/repro/dse/store.py", '''
+        STORE_FORMAT = 2
+        NPZ_FORMAT = 1
+
+        def workload_fingerprint(w):
+            return w
+
+        class AnalysisStore:
+            def _read(self, path, expect_key):
+                return None
+
+            def _write(self, path, key, payload):
+                pass
+
+            def stats(self):
+                return {}
+    ''')
+    return root
+
+
+def test_version_integrity_clean(tmp_path):
+    root = _layer_tree(tmp_path)
+    manifest = tmp_path / "manifest.json"
+    fp.save_manifest(root, manifest)
+    assert fp.check_versions(root, manifest_path=manifest) == []
+
+
+def test_version_integrity_flags_change_without_bump(tmp_path):
+    root = _layer_tree(tmp_path)
+    manifest = tmp_path / "manifest.json"
+    fp.save_manifest(root, manifest)
+    off = root / "src/repro/core/offload.py"
+    off.write_text(off.read_text().replace("max(levels)", "min(levels)"))
+    found = fp.check_versions(root, manifest_path=manifest)
+    assert len(found) == 1
+    assert found[0].symbol == "analysis"
+    assert "ANALYSIS_VERSION" in found[0].message
+    assert "still 2" in found[0].message
+
+
+def test_version_integrity_bump_then_update_passes(tmp_path):
+    root = _layer_tree(tmp_path)
+    manifest = tmp_path / "manifest.json"
+    fp.save_manifest(root, manifest)
+    off = root / "src/repro/core/offload.py"
+    off.write_text(off.read_text()
+                   .replace("max(levels)", "min(levels)")
+                   .replace("ANALYSIS_VERSION = 2", "ANALYSIS_VERSION = 3"))
+    # bumped but not recorded: still an error, pointing at --update-manifest
+    found = fp.check_versions(root, manifest_path=manifest)
+    assert len(found) == 1 and "--update-manifest" in found[0].message
+    fp.save_manifest(root, manifest)
+    assert fp.check_versions(root, manifest_path=manifest) == []
+
+
+def test_version_integrity_ignores_renames_docstrings_comments(tmp_path):
+    root = _layer_tree(tmp_path)
+    manifest = tmp_path / "manifest.json"
+    fp.save_manifest(root, manifest)
+    off = root / "src/repro/core/offload.py"
+    off.write_text(off.read_text()
+                   .replace("depth_cap", "depth_ceiling")
+                   .replace('"""Selection stub."""',
+                            '"""Rewritten docstring."""\n# new comment'))
+    assert fp.check_versions(root, manifest_path=manifest) == []
+
+
+def test_tpu_layer_symbol_filter_ignores_cim_edits(tmp_path):
+    root = _layer_tree(tmp_path)
+    manifest = tmp_path / "manifest.json"
+    fp.save_manifest(root, manifest)
+    be = root / "src/repro/dse/backends.py"
+    be.write_text(be.read_text().replace("return point\n\nclass TpuCandidate",
+                                         "return point * 2\n\nclass TpuCandidate"))
+    found = [f for f in fp.check_versions(root, manifest_path=manifest)
+             if f.symbol == "tpu-analysis"]
+    assert found == []
+
+
+def test_committed_manifest_matches_tree():
+    """The acceptance gate of the CI lint job: the manifest in the tree
+    must describe the tree it ships with."""
+    committed = fp.load_manifest()
+    assert committed, "manifest.json missing — run --update-manifest"
+    current = fp.compute_manifest(REPO_ROOT)
+    for name, rec in current.items():
+        assert name in committed, f"layer {name} not recorded"
+        assert committed[name]["fingerprint"] == rec["fingerprint"], \
+            f"{name}: fingerprint drift — bump {rec['version_const']} " \
+            f"and run --update-manifest"
+        assert committed[name]["version"] == rec["version"], name
+
+
+# ======================================================================
+# jit-purity
+# ======================================================================
+def test_jit_purity_flags_impure_bodies(tmp_path):
+    path = _write(tmp_path, "src/repro/bad.py", '''
+        import time, os
+        import numpy as np
+        import jax
+
+
+        @jax.jit
+        def decorated(x, hist=[]):
+            hist.append(x)
+            return x + time.time()
+
+
+        def scanned(carry, x):
+            v = np.random.rand()
+            return carry + v, x.item()
+
+
+        def kernel(x):
+            if os.environ.get("FLAG"):
+                print("tracing")
+            return x * 2
+
+
+        out = jax.lax.scan(scanned, 0, None)
+        fn = jax.jit(jax.vmap(kernel))
+    ''')
+    found = jit_check_file(path, tmp_path)
+    messages = "\n".join(f.message for f in found)
+    assert "mutable default argument" in messages
+    assert "time.time" in messages
+    assert "np.random.rand" in messages
+    assert ".item() host sync" in messages
+    assert "os.environ" in messages or "os.environ.get" in messages
+    assert "print()" in messages
+    # every finding names the jitted entry it flows through
+    assert all("jitted via" in f.message for f in found)
+
+
+def test_jit_purity_passes_pure_bodies(tmp_path):
+    path = _write(tmp_path, "src/repro/good.py", '''
+        import os
+        import time
+        import jax
+        import jax.numpy as jnp
+
+        # effects *outside* the jitted body are exactly how it's done
+        DEBUG = os.environ.get("DEBUG") == "1"
+        t0 = time.time()
+
+
+        @jax.jit
+        def kernel(x, scale=2):
+            y = jnp.maximum(x, 0) * scale
+            return jnp.sum(y)
+
+
+        def helper(x):
+            print("not jitted, prints are fine")
+            return x
+    ''')
+    assert jit_check_file(path, tmp_path) == []
+
+
+def test_jit_purity_disable_comment(tmp_path):
+    path = _write(tmp_path, "src/repro/waived.py", '''
+        import time
+        import jax
+
+
+        @jax.jit
+        def kernel(x):
+            t = time.time()  # lint: disable=jit-purity
+            return x + t
+    ''')
+    assert jit_check_file(path, tmp_path) == []
+
+
+# ======================================================================
+# accel-parity
+# ======================================================================
+def _parity_tree(tmp_path, accel_source, oracle_source="", test_source=""):
+    root = tmp_path / "repo"
+    _write(root, "src/repro/core/accel/kern.py", accel_source)
+    if oracle_source:
+        _write(root, "src/repro/core/oracle.py", oracle_source)
+    _write(root, "tests/test_accel.py", test_source or "# empty\n")
+    return root
+
+
+def test_parity_flags_missing_annotation(tmp_path):
+    root = _parity_tree(tmp_path, '''
+        def fused_op(a, b):
+            return a + b
+    ''')
+    found = check_parity(root)
+    assert any("no `# lint: numpy-twin" in f.message for f in found)
+
+
+def test_parity_flags_signature_mismatch_and_missing_test(tmp_path):
+    root = _parity_tree(tmp_path, '''
+        # lint: numpy-twin(repro.core.oracle:fused_ref)
+        def fused_op(a, b, out_dtype):
+            return a + b
+    ''', oracle_source='''
+        def fused_ref(a, b):
+            return a + b
+    ''')
+    found = check_parity(root)
+    msgs = "\n".join(f.message for f in found)
+    assert "does not match numpy twin" in msgs
+    assert "no differential test" in msgs
+
+
+def test_parity_passes_twinned_and_tested(tmp_path):
+    root = _parity_tree(tmp_path, '''
+        # lint: numpy-twin(repro.core.oracle:Hier.fused_ref)
+        def fused_op(a, b):
+            return a + b
+
+
+        # lint: numpy-twin(repro.core.oracle:batched_ref, batched)
+        def fused_batch(a, b, n_batch):
+            return a + b
+
+
+        def _private_helper(x):
+            return x
+    ''', oracle_source='''
+        class Hier:
+            def fused_ref(self, a, b):
+                return a - b
+
+
+        def batched_ref(a):
+            return a
+    ''', test_source='''
+        def test_fused_op_differential():
+            assert fused_op is not None
+
+        def test_fused_batch_differential():
+            assert fused_batch is not None
+    ''')
+    assert check_parity(root) == []
+
+
+def test_parity_flags_dangling_twin(tmp_path):
+    root = _parity_tree(tmp_path, '''
+        # lint: numpy-twin(repro.core.oracle:gone)
+        def fused_op(a, b):
+            return a + b
+    ''', oracle_source="X = 1\n",
+        test_source="fused_op\n")
+    found = check_parity(root)
+    assert any("not found" in f.message for f in found)
+
+
+# ======================================================================
+# thread-safety
+# ======================================================================
+def _threads_tree(tmp_path, engine_source):
+    root = tmp_path / "repo"
+    _write(root, "src/repro/dse/engine.py", engine_source)
+    return root
+
+
+def test_threads_flags_unguarded_writes(tmp_path):
+    root = _threads_tree(tmp_path, '''
+        import threading
+
+
+        class Cache:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.hits = 0          # lint: guarded-by(_lock)
+                self._memo = {}        # lint: guarded-by(_lock)
+
+            def lookup(self, key):
+                self.hits += 1                 # unguarded AugAssign
+                self._memo[key] = 1            # unguarded subscript store
+                self._memo.setdefault(key, 2)  # unguarded mutation call
+                with self._lock:
+                    fut = lambda: None
+
+                def deferred():
+                    self.hits = 0              # closure: lock not proven
+                return deferred
+    ''')
+    found = check_threads(root)
+    kinds = "\n".join(f.message for f in found)
+    assert len(found) == 4
+    assert "augmented write" in kinds
+    assert ".setdefault() mutation" in kinds
+    assert all("outside `with self._lock:`" in f.message for f in found)
+
+
+def test_threads_passes_guarded_writes_and_init(tmp_path):
+    root = _threads_tree(tmp_path, '''
+        import threading
+
+
+        class Cache:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.hits = 0      # lint: guarded-by(_lock)
+                self._memo = {}    # lint: guarded-by(_lock)
+                self.hits = 1      # __init__ is exempt
+
+            def lookup(self, key):
+                with self._lock:
+                    self.hits += 1
+                    self._memo[key] = 1
+                    if key:
+                        self._memo.pop(key, None)
+                local = {}
+                local["x"] = 1     # locals are out of scope
+                return local
+    ''')
+    assert check_threads(root) == []
+
+
+def test_threads_flags_abba_lock_order(tmp_path):
+    root = _threads_tree(tmp_path, '''
+        import threading
+
+
+        class TwoLocks:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+                self.x = 0    # lint: guarded-by(_a)
+
+            def path1(self):
+                with self._a:
+                    with self._b:
+                        self.x = 1
+
+            def path2(self):
+                with self._b:
+                    with self._a:
+                        self.x = 2
+    ''')
+    found = check_threads(root)
+    assert any("inconsistent lock order" in f.message
+               and "ABBA" in f.message for f in found)
+
+
+def test_threads_disable_comment(tmp_path):
+    root = _threads_tree(tmp_path, '''
+        import threading
+
+
+        class Cache:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.hits = 0  # lint: guarded-by(_lock)
+
+            def reset_unpublished(self):
+                self.hits = 0  # lint: disable=thread-safety
+    ''')
+    assert check_threads(root) == []
+
+
+# ======================================================================
+# framework: baseline, suppression keys, runner
+# ======================================================================
+def test_baseline_requires_justification(tmp_path):
+    bad = tmp_path / "baseline.json"
+    bad.write_text(json.dumps(
+        {"suppressions": [{"key": "x:y:z", "justification": "  "}]}))
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(bad)
+
+
+def test_baseline_suppresses_by_stable_key(tmp_path):
+    root = _threads_tree(tmp_path, '''
+        import threading
+
+
+        class Cache:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.hits = 0  # lint: guarded-by(_lock)
+
+            def racy(self):
+                self.hits += 1
+    ''')
+    found = check_threads(root)
+    assert len(found) == 1
+    report = run_checkers(root=root, only=("thread-safety",),
+                          baseline={found[0].key: "perf counter, test-only"})
+    assert report.ok
+    assert [w for _, w in report.suppressed] == ["perf counter, test-only"]
+
+
+def test_runner_rejects_unknown_checker():
+    with pytest.raises(ValueError, match="unknown checker"):
+        run_checkers(only=("no-such-checker",))
+
+
+def test_repo_tree_is_lint_clean():
+    """`python -m repro.lint` must exit 0 on the tree as committed."""
+    report = run_checkers()
+    rendered = "\n".join(f.render() for f in report.findings)
+    assert report.ok, f"lint findings on the committed tree:\n{rendered}"
+
+
+def test_comment_annotations_ignore_strings(tmp_path):
+    src = _write(tmp_path, "x.py",
+                 's = "# lint: guarded-by(_fake)"\n'
+                 'y = 1  # lint: guarded-by(_real)\n')
+    comments = lint_core.file_comments(src)
+    assert list(comments) == [2]
+    assert "guarded-by(_real)" in comments[2]

@@ -1,7 +1,9 @@
 """repro.dse.store: persisted-vs-fresh artifact equality, versioned
 invalidation, corrupted-file recovery, cross-engine zero-rebuild runs,
-concurrent same-key races (one blob, consistent counters), and
-backend-namespaced coexistence (CiM + TPU artifacts in one cache dir)."""
+concurrent same-key races (one blob, consistent counters), directory
+format-marker compatibility, and backend-namespaced coexistence (CiM +
+TPU artifacts in one cache dir)."""
+import json
 import pickle
 import threading
 
@@ -9,8 +11,8 @@ import pytest
 
 from repro.core import profile_system
 from repro.core.offload import OffloadConfig
-from repro.dse import (AnalysisCache, AnalysisStore, DSEEngine, SweepSpace,
-                       TpuBackend, TpuOption)
+from repro.dse import (AnalysisCache, AnalysisStore, DSEEngine,
+                       StoreFormatError, SweepSpace, TpuBackend, TpuOption)
 from repro.dse.space import CacheOption
 from repro.dse.store import STORE_FORMAT, workload_fingerprint
 
@@ -117,6 +119,59 @@ def test_version_bump_invalidates(tmp_path):
     # the old version's artifact is untouched (keys don't collide)
     assert AnalysisStore(tmp_path, version=1).load_layer1(
         "NB", CACHE.levels) is not None
+
+
+# ---------------------------------------------------------- format marker
+def test_fresh_store_writes_format_marker(tmp_path):
+    AnalysisStore(tmp_path)
+    marker = tmp_path / "FORMAT.json"
+    assert json.loads(marker.read_text()) == {"store_format": STORE_FORMAT}
+    AnalysisStore(tmp_path)                       # reopening is fine
+
+
+def test_newer_format_directory_refuses_to_open(tmp_path):
+    (tmp_path / "FORMAT.json").write_text(
+        json.dumps({"store_format": STORE_FORMAT + 1}))
+    with pytest.raises(StoreFormatError, match="newer|STORE_FORMAT"):
+        AnalysisStore(tmp_path)
+    # ...and through the engine, the error carries the directory name
+    with pytest.raises(StoreFormatError, match=str(tmp_path)):
+        DSEEngine(store=tmp_path)
+
+
+def test_older_or_corrupt_marker_is_upgraded(tmp_path):
+    (tmp_path / "FORMAT.json").write_text(
+        json.dumps({"store_format": STORE_FORMAT - 1}))
+    AnalysisStore(tmp_path)                       # per-file stamps protect loads
+    assert json.loads((tmp_path / "FORMAT.json").read_text()) == \
+        {"store_format": STORE_FORMAT}
+    (tmp_path / "FORMAT.json").write_text("not json{")
+    AnalysisStore(tmp_path)
+    assert json.loads((tmp_path / "FORMAT.json").read_text()) == \
+        {"store_format": STORE_FORMAT}
+
+
+def test_cli_clear_error_on_newer_store(tmp_path, capsys):
+    """examples/dse_cim.py must exit 2 with a one-line error (no
+    traceback) when --cache-dir points at a newer-format store."""
+    import importlib.util
+    import pathlib
+    cli_path = (pathlib.Path(__file__).resolve().parents[1]
+                / "examples" / "dse_cim.py")
+    spec = importlib.util.spec_from_file_location("dse_cim_cli", cli_path)
+    cli = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cli)
+    (tmp_path / "FORMAT.json").write_text(json.dumps({"store_format": 99}))
+    rc = cli.main(["--workload", "NB", "--cache-dir", str(tmp_path)])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "STORE_FORMAT=99" in err
+    assert "Traceback" not in err
+    rc = cli.main(["--backend", "tpu", "--workload", "xlstm-125m",
+                   "--chips", "v5e", "--thresholds", "16K",
+                   "--cache-dir", str(tmp_path)])
+    assert rc == 2
+    assert "STORE_FORMAT=99" in capsys.readouterr().err
 
 
 # --------------------------------------------------------------- recovery

@@ -87,6 +87,13 @@ def main(argv=None) -> int:
             print(f"{name}:{fence_line}: {status}")
             if proc.returncode != 0:
                 failures += 1
+                n_lines = len(source.splitlines())
+                # the block body spans the lines between the fences
+                print(f"[check_docs] failing block: {name} lines "
+                      f"{fence_line + 1}-{fence_line + n_lines} "
+                      f"(fence opened at line {fence_line})")
+                for off, src_line in enumerate(source.splitlines(), 1):
+                    print(f"  {fence_line + off:>5} | {src_line}")
                 sys.stdout.write(proc.stdout)
                 sys.stderr.write(proc.stderr)
     if not args.list:
