@@ -126,7 +126,9 @@ def gate(doc: Dict, baseline: Dict,
 
 
 def run(workloads: Optional[Sequence[str]] = None,
-        json_path: Optional[str] = None) -> Dict:
+        json_path: Optional[str] = None,
+        trace_path: Optional[str] = None) -> Dict:
+    from repro import obs
     from repro.core.offload import OffloadConfig, analyze_trace
     from repro.core.profiler import profile_system
     from repro.core.reshape import reshape
@@ -140,6 +142,12 @@ def run(workloads: Optional[Sequence[str]] = None,
     workloads = tuple(workloads or SWEEP_BENCHES)
     full_set = workloads == tuple(SWEEP_BENCHES)
     cfg = OffloadConfig()
+
+    # --trace records the run as a Chrome trace-event file; the per-stage
+    # loops below call the analysis functions directly (few spans), but
+    # the cold fig14 sweeps exercise the fully instrumented engine path
+    if trace_path:
+        obs.enable(obs.Tracer())
 
     stages: Dict[str, Dict] = {}
     totals = {"n_instructions": 0, "trace_s": 0.0, "replay_s": 0.0,
@@ -252,6 +260,10 @@ def run(workloads: Optional[Sequence[str]] = None,
            "machine_calibration": calibrate(),
            "stages": stages, "totals": totals, "cold_sweep": cold,
            "layer1_store": blob}
+    if trace_path:
+        n_events = obs.tracer().export_chrome(trace_path)
+        doc["trace"] = {"path": str(trace_path), "events": n_events}
+        obs.disable()
     if json_path:
         pathlib.Path(json_path).write_text(json.dumps(doc, indent=1))
     return doc
@@ -259,9 +271,11 @@ def run(workloads: Optional[Sequence[str]] = None,
 
 def main(workloads: Optional[Sequence[str]] = None,
          json_path: Optional[str] = None,
-         gate_path: Optional[str] = None):
+         gate_path: Optional[str] = None,
+         trace_path: Optional[str] = None):
     banner("BENCH: columnar analysis pipeline throughput")
-    doc = run(workloads=workloads, json_path=json_path)
+    doc = run(workloads=workloads, json_path=json_path,
+              trace_path=trace_path)
     for name, s in doc["stages"].items():
         print(f"  {name:8s} n={s['n_instructions']:6d}  "
               f"trace {s['trace_ips']:>9,}/s  "
@@ -288,6 +302,9 @@ def main(workloads: Optional[Sequence[str]] = None,
     print(line)
     if json_path:
         print(f"  [json] {json_path}")
+    if trace_path:
+        print(f"  [trace] {trace_path}: {doc['trace']['events']} events "
+              f"(load in ui.perfetto.dev)")
     if gate_path:
         baseline = json.loads(pathlib.Path(gate_path).read_text())
         failures = gate(doc, baseline)

@@ -95,6 +95,7 @@ def run(url: Optional[str] = None, clients: int = 8,
         docs = [client_space(i % clients, workloads)
                 for i in range(clients * requests_per_client)]
         latencies: List[float] = []
+        trace_ids: List[Optional[str]] = []
         errors: List[str] = []
         lock = threading.Lock()
         barrier = threading.Barrier(clients)
@@ -106,15 +107,17 @@ def run(url: Optional[str] = None, clients: int = 8,
                 doc = docs[cid * requests_per_client + rid]
                 t0 = time.perf_counter()
                 try:
-                    local.sweep(doc["workloads"], caches=doc["caches"],
-                                cim_levels=doc["cim_levels"],
-                                techs=doc["techs"])
+                    reply = local.sweep(doc["workloads"],
+                                        caches=doc["caches"],
+                                        cim_levels=doc["cim_levels"],
+                                        techs=doc["techs"])
                 except Exception as exc:  # noqa: BLE001 — reported below
                     with lock:
                         errors.append(f"client {cid} req {rid}: {exc}")
                     return
                 with lock:
                     latencies.append(time.perf_counter() - t0)
+                    trace_ids.append(reply.trace_id)
 
         threads = [threading.Thread(target=one_client, args=(i,))
                    for i in range(clients)]
@@ -126,6 +129,25 @@ def run(url: Optional[str] = None, clients: int = 8,
         storm_s = time.perf_counter() - t_start
         if errors:
             raise RuntimeError("bench clients failed: " + "; ".join(errors))
+
+        # ---- per-request traces: distinct ids, last one queryable ------
+        # every request must come back with its own server-side trace id
+        # (None across the board when the daemon runs --no-trace), and the
+        # most recent id must still resolve through /v1/trace/<id> — i.e.
+        # the daemon's ring buffer outlives at least one full storm
+        if any(tid is None for tid in trace_ids):
+            tracing = {"enabled": False}
+        else:
+            try:
+                tree = client.trace(trace_ids[-1])
+                last_spans: Optional[int] = tree["n_spans"]
+            except Exception as exc:  # noqa: BLE001 — gated in check()
+                last_spans = None
+                print(f"  trace lookup failed: {exc}")
+            tracing = {"enabled": True,
+                       "n_requests": len(trace_ids),
+                       "distinct_ids": len(set(trace_ids)),
+                       "last_trace_spans": last_spans}
 
         m1 = client.metrics()
         pts0 = m0["service"].get("points", {})
@@ -197,6 +219,7 @@ def run(url: Optional[str] = None, clients: int = 8,
             "warm_repeat": {"n_records": len(reply.records),
                             "trace_builds": warm_trace_builds,
                             "evaluated": warm_evaluated},
+            "tracing": tracing,
         }
     if json_path:
         pathlib.Path(json_path).write_text(json.dumps(doc, indent=1))
@@ -220,6 +243,16 @@ def check(doc: Dict) -> List[str]:
     if warm["trace_builds"] != 0 or warm["evaluated"] != 0:
         failures.append(f"warm repeat did work: {warm['trace_builds']} "
                         f"trace builds, {warm['evaluated']} evaluations")
+    tr = doc.get("tracing") or {}
+    if tr.get("enabled"):          # a --no-trace daemon is record-only here
+        if tr["distinct_ids"] != tr["n_requests"]:
+            failures.append(f"{tr['n_requests']} storm requests produced "
+                            f"only {tr['distinct_ids']} distinct trace ids "
+                            f"— per-request root spans are not isolated")
+        if not tr.get("last_trace_spans"):
+            failures.append("the last storm trace id did not resolve via "
+                            "/v1/trace/<id> — ring buffer evicted or the "
+                            "trace was never finished")
     return failures
 
 
@@ -261,6 +294,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"  warm repeat: {warm['n_records']} records, "
           f"{warm['trace_builds']} trace builds, "
           f"{warm['evaluated']} evaluations")
+    tr = doc["tracing"]
+    if tr.get("enabled"):
+        print(f"  traces: {tr['distinct_ids']} distinct ids over "
+              f"{tr['n_requests']} requests; last tree "
+              f"{tr['last_trace_spans']} spans via /v1/trace")
+    else:
+        print("  traces: daemon tracing disabled (record-only)")
     if args.json:
         print(f"  [json] {args.json}")
     if not args.no_check:

@@ -69,8 +69,11 @@ def main(argv=None) -> int:
             workloads = tuple(take_value("--timing-workloads").split(","))
         gate_path = (take_value("--timing-gate")
                      if "--timing-gate" in argv else None)
+        trace_path = (take_value("--trace")
+                      if "--trace" in argv else None)
         doc = analysis_timing.main(workloads=workloads, json_path=json_path,
-                                   gate_path=gate_path)
+                                   gate_path=gate_path,
+                                   trace_path=trace_path)
         if doc.get("gate", {}).get("failures"):
             return 1
         if not argv:                       # timing only, no named artifacts

@@ -53,6 +53,7 @@ cache dir, adaptive refinement, reports — behaves identically::
 import argparse
 import sys
 
+from repro import obs
 from repro.dse import (AdaptiveDSE, DSEEngine, HOST_PRESETS, StoreFormatError,
                        SweepSpace, TPU_PRESETS, TpuBackend, TpuOption,
                        parse_bytes)
@@ -91,6 +92,12 @@ def main(argv=None) -> int:
                     help="frontier-driven refinement instead of the "
                          "exhaustive cross-product (same frontier, fewer "
                          "points priced)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome "
+                         "trace-event file here (open in ui.perfetto.dev)")
+    ap.add_argument("--trace-report", action="store_true",
+                    help="enable span tracing and print the per-stage "
+                         "attribution table after the run")
     args = ap.parse_args(argv)
 
     # each backend owns some axes; mixing them is a mistake worth stopping
@@ -108,6 +115,15 @@ def main(argv=None) -> int:
                      f"fusion thresholds, TPU-backend axes; the CiM "
                      f"pipeline sweeps caches/levels/techs instead. Drop "
                      f"{'/'.join(tpu_only)} or use --backend tpu.")
+
+    args.tracing = bool(args.trace or args.trace_report)
+    if args.tracing:
+        # self-time attribution only telescopes to the run's wall-clock
+        # when stages don't overlap; honor an explicit --executor, but
+        # default a traced run to serial so the report sums to ~100%
+        if "--executor" not in (argv if argv is not None else sys.argv[1:]):
+            args.executor = "serial"
+        obs.enable(obs.Tracer())
 
     if args.backend == "tpu":
         return _tpu_main(args)
@@ -162,6 +178,7 @@ def main(argv=None) -> int:
         if args.json:
             results.to_json(args.json)
             print(f"[json] {args.json}")
+        _finish_trace(args)
         return 0
 
     # the Fig. 14/15/16 slices fix the host axis at its first value
@@ -212,7 +229,22 @@ def main(argv=None) -> int:
     if args.json:
         results.to_json(args.json)
         print(f"[json] {args.json}")
+    _finish_trace(args)
     return 0
+
+
+def _finish_trace(args) -> None:
+    """Export/report the run's spans (``--trace`` / ``--trace-report``)."""
+    if not getattr(args, "tracing", False):
+        return
+    t = obs.tracer()
+    if args.trace:
+        n = t.export_chrome(args.trace)
+        print(f"[trace] {args.trace}: {n} events "
+              f"(load in ui.perfetto.dev)")
+    if args.trace_report:
+        print(obs.attribution_markdown(t.stage_attribution()))
+    obs.disable()
 
 
 def _print_store_bytes(st: dict) -> None:
@@ -314,6 +346,7 @@ def _tpu_main(args) -> int:
     if args.json:
         results.to_json(args.json)
         print(f"[json] {args.json}")
+    _finish_trace(args)
     return 0
 
 

@@ -111,9 +111,18 @@ def replay_columns(addrs, is_writes, geometries):
         return None
     try:
         from repro.core.accel.replay import replay_columns_batch
-        return replay_columns_batch(addrs, is_writes, geometries)
     except ImportError:
         return None
+    from repro import obs
+    if obs.tracer() is None:               # keep the untraced launch bare
+        return replay_columns_batch(addrs, is_writes, geometries)
+    before = jit_compiles()
+    with obs.span("accel.replay_batch", cat="jit",
+                  n_geometries=len(geometries),
+                  n_accesses=int(len(addrs))) as sp:
+        out = replay_columns_batch(addrs, is_writes, geometries)
+        sp.set(jit_compiles=jit_compiles() - before)
+        return out
 
 
 def place_candidates(part, ct, cfg):
@@ -122,6 +131,13 @@ def place_candidates(part, ct, cfg):
         return None
     try:
         from repro.core.accel.place import place_candidates_jax
-        return place_candidates_jax(part, ct, cfg)
     except ImportError:
         return None
+    from repro import obs
+    if obs.tracer() is None:               # hot per-config path: one read
+        return place_candidates_jax(part, ct, cfg)
+    before = jit_compiles()
+    with obs.span("accel.place", cat="jit") as sp:
+        out = place_candidates_jax(part, ct, cfg)
+        sp.set(jit_compiles=jit_compiles() - before)
+        return out

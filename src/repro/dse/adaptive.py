@@ -51,6 +51,7 @@ import dataclasses
 from typing import (Dict, Iterator, List, Optional, Sequence, Set, Tuple,
                     Union)
 
+from repro import obs
 from repro.dse.engine import DSEEngine
 from repro.dse.pareto import Objective, frontier_stable
 from repro.dse.results import SweepRecord, SweepResults
@@ -265,19 +266,28 @@ class AdaptiveDSE:
             fresh = self._dedup(candidates, seen)
             if not fresh:
                 break                          # nothing new to explore
-            res = self.engine.run(fresh)
-            res = SweepResults(
-                records=[dataclasses.replace(r, round=rnd)
-                         for r in res.records],
-                stats=res.stats, elapsed_s=res.elapsed_s)
-            merged = res if merged is None else merged.merge(res)
-            priced_points.extend(fresh)
+            # the span closes before the yield: a generator must not hold
+            # an open span across a suspension (the consumer's own spans
+            # would nest under it and the contextvar reset would cross
+            # frames), so each round is traced as a closed unit
+            with obs.span("adaptive.round", cat="adaptive", round=rnd,
+                          n_candidates=len(candidates),
+                          n_fresh=len(fresh)) as rsp:
+                res = self.engine.run(fresh)
+                res = SweepResults(
+                    records=[dataclasses.replace(r, round=rnd)
+                             for r in res.records],
+                    stats=res.stats, elapsed_s=res.elapsed_s)
+                merged = res if merged is None else merged.merge(res)
+                priced_points.extend(fresh)
 
-            frontier = merged.pareto(self.objectives)
-            # design identity, not objective values: two designs that price
-            # identically still count as frontier movement
-            stable = frontier_stable(prev_frontier, frontier, self.objectives,
-                                     key=lambda r: priced_points[r.index].key)
+                frontier = merged.pareto(self.objectives)
+                # design identity, not objective values: two designs that
+                # price identically still count as frontier movement
+                stable = frontier_stable(
+                    prev_frontier, frontier, self.objectives,
+                    key=lambda r: priced_points[r.index].key)
+                rsp.set(frontier_size=len(frontier), stable=stable)
             yield RoundEvent(
                 info=RoundInfo(
                     round=rnd, n_candidates=len(candidates),

@@ -38,6 +38,7 @@ import dataclasses
 import hashlib
 from typing import Any, Dict, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core.host_model import HostModel
 from repro.core.profiler import profile_system
 from repro.core.tpu_model import TpuChip, roofline_terms, step_energy_pj
@@ -96,9 +97,21 @@ class AnalysisBackend(abc.ABC):
     # ---------------------------------------------------------- composite
     def evaluate(self, cache, point: SweepPoint,
                  host: HostModel) -> SweepRecord:
-        analysis = self.analyze(cache, point)
-        selection = self.select(cache, point, analysis)
-        return self.price(point, analysis, selection, host)
+        if obs.tracer() is None:           # keep the untraced path bare
+            analysis = self.analyze(cache, point)
+            selection = self.select(cache, point, analysis)
+            return self.price(point, analysis, selection, host)
+        with obs.span("backend.evaluate", cat="engine", backend=self.name,
+                      workload=point.workload, point=point.label):
+            with obs.span("backend.analyze", cat="analysis",
+                          backend=self.name, workload=point.workload):
+                analysis = self.analyze(cache, point)
+            with obs.span("backend.select", cat="select",
+                          backend=self.name, workload=point.workload):
+                selection = self.select(cache, point, analysis)
+            with obs.span("backend.price", cat="price", backend=self.name,
+                          workload=point.workload):
+                return self.price(point, analysis, selection, host)
 
     def warm(self, cache, point: SweepPoint) -> None:
         """Build the layer-1 artifact ahead of the pricing fan-out (the

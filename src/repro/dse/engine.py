@@ -53,6 +53,7 @@ import weakref
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro import obs
 from repro.core.host_model import DEFAULT_HOST, HostModel
 from repro.core.offload import (OffloadConfig, OffloadResult, TraceAnalysis,
                                 analyze_trace, rehydrate_analysis)
@@ -127,27 +128,33 @@ class AnalysisCache:
         of re-running the trace VM."""
         from repro.workloads import build          # late: keep core importable
         skey = ("structural", workload)
-        with self._key_lock(skey):
-            try:
-                with self._lock:
-                    st = self._structural.get(workload)
-                if st is None:
-                    fn, args = build(workload)
-                    st = trace_structural(fn, *args)
+        with obs.span("cache.trace_vm", cat="trace", workload=workload) as sp:
+            with self._key_lock(skey):
+                try:
                     with self._lock:
-                        self._structural[workload] = st
-                return st
-            finally:
-                self._prune_lock(skey)
+                        st = self._structural.get(workload)
+                    if st is None:
+                        sp.set(source="build")
+                        fn, args = build(workload)
+                        st = trace_structural(fn, *args)
+                        with self._lock:
+                            self._structural[workload] = st
+                    else:
+                        sp.set(source="memo")
+                    return st
+                finally:
+                    self._prune_lock(skey)
 
     def trace(self, workload: str, cache: CacheOption) -> TraceResult:
         key = (workload, cache.levels)             # full geometry, not name
-        with self._key_lock(key):
+        with obs.span("cache.trace", cat="replay", workload=workload,
+                      cache=cache.name) as sp, self._key_lock(key):
             try:
                 with self._lock:
                     hit = self._traces.get(key)
                     if hit is not None:
                         self.trace_hits += 1
+                        sp.set(source="memo", layer=1)
                         return hit
                 if self.store is not None:
                     loaded = self.store.load_layer1(workload, cache.levels)
@@ -161,9 +168,11 @@ class AnalysisCache:
                             if flow is not None and key not in self._analyses:
                                 self._analyses[key] = rehydrate_analysis(tr,
                                                                          flow)
+                        sp.set(source="store", layer=1)
                         return tr
                 with self._lock:
                     self.trace_builds += 1
+                sp.set(source="build", layer=1)
                 tr = attach_cache_results(self._structural_trace(workload),
                                           cache.levels)
                 with self._lock:
@@ -200,7 +209,8 @@ class AnalysisCache:
                 self.trace(workload, c)
             return
         gkey = ("replay_group", workload) + tuple(c.levels for c in uniq)
-        with self._key_lock(gkey):
+        with obs.span("cache.replay_batch", cat="replay", workload=workload,
+                      n_geometries=len(uniq)) as gsp, self._key_lock(gkey):
             try:
                 missing: List[CacheOption] = []
                 for c in uniq:
@@ -224,6 +234,8 @@ class AnalysisCache:
                                         rehydrate_analysis(tr, flow)
                             continue
                     missing.append(c)
+                gsp.set(n_replayed=len(missing),
+                        source="build" if missing else "memo")
                 if not missing:
                     return
                 st = self._structural_trace(workload)
@@ -245,17 +257,22 @@ class AnalysisCache:
         """IDG/flow artifacts for a trace, built lazily on first use —
         callers that only need the raw trace never pay for the flow index."""
         key = (workload, cache.levels)
-        with self._key_lock(("analysis",) + key):
+        with obs.span("cache.idg", cat="analysis", workload=workload,
+                      cache=cache.name) as sp, \
+                self._key_lock(("analysis",) + key):
             try:
                 with self._lock:
                     hit = self._analyses.get(key)
                 if hit is not None:
+                    sp.set(source="memo")
                     return hit
                 tr = self.trace(workload, cache)
                 with self._lock:           # a store hit may have rehydrated it
                     hit = self._analyses.get(key)
                 if hit is not None:
+                    sp.set(source="store")
                     return hit
+                sp.set(source="build")
                 analysis = analyze_trace(tr)
                 with self._lock:
                     self._analyses[key] = analysis
@@ -273,12 +290,14 @@ class AnalysisCache:
         # the frozen OffloadConfig is hashable-by-value: using it directly
         # keeps the key complete if new knobs are ever added to it
         key = (workload, cache.levels, cfg)
-        with self._key_lock(key):
+        with obs.span("cache.select", cat="select", workload=workload,
+                      cache=cache.name) as sp, self._key_lock(key):
             try:
                 with self._lock:
                     hit = self._offloads.get(key)
                     if hit is not None:
                         self.offload_hits += 1
+                        sp.set(source="memo", layer=2)
                         return hit
                 if self.store is not None:
                     loaded = self.store.load_layer2(workload, cache.levels,
@@ -286,9 +305,11 @@ class AnalysisCache:
                     if loaded is not None:
                         with self._lock:
                             self._offloads[key] = loaded
+                        sp.set(source="store", layer=2)
                         return loaded
                 with self._lock:
                     self.offload_builds += 1
+                sp.set(source="build", layer=2)
                 analysis = self.trace_analysis(workload, cache)
                 result = analysis.select(cfg)
                 reshaped = reshape(analysis.trace, result)
@@ -320,11 +341,15 @@ class AnalysisCache:
         builds, hits = (("trace_builds", "trace_hits") if layer == 1
                         else ("offload_builds", "offload_hits"))
         full_key = (layer,) + key
-        with self._key_lock(("blob",) + full_key):
+        with obs.span(f"cache.artifact.l{layer}",
+                      cat=("analysis" if layer == 1 else "select"),
+                      layer=layer, key=str(key[:2])) as sp, \
+                self._key_lock(("blob",) + full_key):
             try:
                 with self._lock:
                     if full_key in self._blobs:
                         setattr(self, hits, getattr(self, hits) + 1)
+                        sp.set(source="memo")
                         return self._blobs[full_key]
                 if self.store is not None and store_spec is not None:
                     payload = self.store.load_blob(layer, store_spec)
@@ -332,9 +357,11 @@ class AnalysisCache:
                         value = payload["artifact"]
                         with self._lock:
                             self._blobs[full_key] = value
+                        sp.set(source="store")
                         return value
                 with self._lock:
                     setattr(self, builds, getattr(self, builds) + 1)
+                sp.set(source="build")
                 value = build()
                 with self._lock:
                     self._blobs[full_key] = value
@@ -368,8 +395,9 @@ _WORKER_CACHES: Dict[Tuple[Optional[str], Optional[int]], AnalysisCache] = {}
 def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
                   backend: AnalysisBackend,
                   store_root: Optional[str] = None,
-                  store_version: Optional[int] = None
-                  ) -> Tuple[List[SweepRecord], Dict[str, int]]:
+                  store_version: Optional[int] = None,
+                  trace_ctx: Optional[obs.TraceContext] = None
+                  ) -> Tuple[List[SweepRecord], Dict[str, int], List[Dict]]:
     """Price a run of points inside one process-pool worker.
 
     Workers route every analysis miss through the shared on-disk
@@ -379,7 +407,9 @@ def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
     per key, not one per worker.  ``backend`` is the engine's (pickled
     along: backends are small frozen dataclasses).  Returns the records
     plus this chunk's delta of the cache+store counters, so the parent can
-    report true build totals across all workers."""
+    report true build totals across all workers, plus the finished span
+    dicts collected under ``trace_ctx`` (empty when the parent was not
+    tracing) for the coordinator's tracer to :func:`repro.obs.ingest`."""
     cache_key = (store_root, store_version)
     cache = _WORKER_CACHES.get(cache_key)
     if cache is None:
@@ -387,10 +417,22 @@ def _worker_chunk(points: Sequence[SweepPoint], host: HostModel,
                  if store_root is not None else None)
         cache = _WORKER_CACHES[cache_key] = AnalysisCache(store=store)
     before = cache.stats()
-    records = [backend.evaluate(cache, p, host) for p in points]
+    spans: List[Dict] = []
+    if trace_ctx is not None:
+        # spans land in a worker-local tracer keyed to this pid; drain()
+        # ships exactly this chunk's spans (workers run chunks serially)
+        worker_tracer = obs.enable()
+        with obs.attach(trace_ctx):
+            with obs.span("worker.chunk", cat="engine",
+                          workload=points[0].workload,
+                          n_points=len(points), pid=os.getpid()):
+                records = [backend.evaluate(cache, p, host) for p in points]
+        spans, _ = worker_tracer.drain()
+    else:
+        records = [backend.evaluate(cache, p, host) for p in points]
     delta = {k: v - before.get(k, 0) for k, v in cache.stats().items()
              if not k.startswith("store_bytes")}   # gauges, not counters
-    return records, delta
+    return records, delta, spans
 
 
 class DSEEngine:
@@ -499,41 +541,58 @@ class DSEEngine:
         stats_before = self.analysis.stats()
 
         worker_stats: Optional[Dict[str, int]] = None
-        if self.executor == "serial":
-            for p in points:
-                records[p.index] = self.evaluate(p)
-        elif self.executor == "process":
-            chunks = self._chunks(points)
-            store = self._worker_store()
-            # spawn, not fork: the parent holds live jax/XLA threads
-            ctx = multiprocessing.get_context("spawn")
-            with ProcessPoolExecutor(max_workers=self.max_workers,
-                                     mp_context=ctx) as pool:
-                futs = [pool.submit(_worker_chunk, c, self.host, self.backend,
-                                    str(store.root), store.version)
-                        for c in chunks]
-                worker_stats = {}
-                for fut in futs:
-                    recs, delta = fut.result()
-                    for rec in recs:
+        with obs.span("dse.run", cat="engine", executor=self.executor,
+                      backend=self.backend.name, n_points=len(points)):
+            if self.executor == "serial":
+                for p in points:
+                    records[p.index] = self.evaluate(p)
+            elif self.executor == "process":
+                chunks = self._chunks(points)
+                store = self._worker_store()
+                trace_ctx = obs.current()    # pickled into every chunk
+                # spawn, not fork: the parent holds live jax/XLA threads
+                ctx = multiprocessing.get_context("spawn")
+                with ProcessPoolExecutor(max_workers=self.max_workers,
+                                         mp_context=ctx) as pool:
+                    futs = [pool.submit(_worker_chunk, c, self.host,
+                                        self.backend, str(store.root),
+                                        store.version, trace_ctx)
+                            for c in chunks]
+                    worker_stats = {}
+                    for fut in futs:
+                        recs, delta, spans = fut.result()
+                        obs.ingest(spans)
+                        for rec in recs:
+                            records[rec.index] = rec
+                        for k, v in delta.items():
+                            worker_stats[k] = worker_stats.get(k, 0) + v
+                # workers wrote behind this process's back: re-walk the store
+                # so the byte gauges below reflect their artifacts
+                if self.analysis.store is not None:
+                    self.analysis.store.invalidate_usage_cache()
+            else:
+                # warm the analysis cache serially (deterministic build
+                # order, exactly one expensive analysis pass per key), then
+                # fan out; the backend sees the whole key set at once so it
+                # can batch — under EVA_CIM_ACCEL=jax the CiM warm path
+                # replays all of a workload's geometries in one vmapped
+                # kernel launch
+                warm_keys = [c[0] for c in self._chunks(points)]
+                with obs.span("engine.warm", cat="engine",
+                              n_keys=len(warm_keys)):
+                    self.backend.warm_many(self.analysis, warm_keys)
+                trace_ctx = obs.current()
+                if trace_ctx is None:
+                    eval_fn = self.evaluate
+                else:
+                    # contextvars don't follow submit(): re-attach the run
+                    # context in each pool thread so spans parent correctly
+                    def eval_fn(point: SweepPoint) -> SweepRecord:
+                        with obs.attach(trace_ctx):
+                            return self.evaluate(point)
+                with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+                    for rec in pool.map(eval_fn, points):
                         records[rec.index] = rec
-                    for k, v in delta.items():
-                        worker_stats[k] = worker_stats.get(k, 0) + v
-            # workers wrote behind this process's back: re-walk the store
-            # so the byte gauges below reflect their artifacts
-            if self.analysis.store is not None:
-                self.analysis.store.invalidate_usage_cache()
-        else:
-            # warm the analysis cache serially (deterministic build order,
-            # exactly one expensive analysis pass per key), then fan out;
-            # the backend sees the whole key set at once so it can batch —
-            # under EVA_CIM_ACCEL=jax the CiM warm path replays all of a
-            # workload's geometries in one vmapped kernel launch
-            self.backend.warm_many(self.analysis,
-                                   [c[0] for c in self._chunks(points)])
-            with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-                for rec in pool.map(self.evaluate, points):
-                    records[rec.index] = rec
 
         # stats cover THIS run only, whatever the executor: thread/serial
         # report the shared-cache counter delta, process mode the summed

@@ -55,6 +55,16 @@ class SweepReply:
     def stats(self) -> Dict:
         return self.result.get("stats", {})
 
+    @property
+    def trace_id(self) -> Optional[str]:
+        """The server-side trace id from the ``start`` event (``None``
+        when the daemon runs with tracing disabled); feed it to
+        :meth:`ServiceClient.trace` for the request's span tree."""
+        for e in self.events:
+            if e.get("event") == "start":
+                return e.get("trace_id")
+        return None
+
 
 class ServiceClient:
     """One daemon endpoint (``http://host:port``), any number of calls.
@@ -156,6 +166,11 @@ class ServiceClient:
 
     def metrics(self) -> Dict:
         return self._get_json("/metrics")
+
+    def trace(self, trace_id: str) -> Dict:
+        """The finished span tree of a recent request (404 →
+        :class:`ServiceError`: the id fell out of the daemon's ring)."""
+        return self._get_json(f"/v1/trace/{urllib.parse.quote(trace_id)}")
 
     def wait_ready(self, deadline_s: float = 15.0) -> Dict:
         """Block until the daemon answers ``/healthz`` (startup races in

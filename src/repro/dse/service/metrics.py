@@ -49,6 +49,17 @@ class Gauge:
         self.value = value
 
 
+def _pick(ordered: List[float], q: float) -> Optional[float]:
+    """Nearest-rank quantile over an ascending list (``None`` if empty).
+
+    The single quantile implementation: :meth:`Histogram.quantile` and
+    :meth:`Histogram.snapshot` both route through it, each sorting the
+    reservoir exactly once."""
+    if not ordered:
+        return None
+    return ordered[min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))]
+
+
 class Histogram:
     """Latency summary: exact count/sum/max, reservoir quantiles."""
 
@@ -68,25 +79,15 @@ class Histogram:
         self._recent.append(value)
 
     def quantile(self, q: float) -> Optional[float]:
-        if not self._recent:
-            return None
-        ordered = sorted(self._recent)
-        idx = min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))
-        return ordered[idx]
+        return _pick(sorted(self._recent), q)
 
     def snapshot(self) -> Dict[str, Optional[float]]:
         ordered: List[float] = sorted(self._recent)
-
-        def pick(q: float) -> Optional[float]:
-            if not ordered:
-                return None
-            return ordered[min(len(ordered) - 1,
-                               max(0, round(q * (len(ordered) - 1))))]
-
         return {"count": self.count, "sum": round(self.sum, 6),
                 "mean": round(self.sum / self.count, 6) if self.count else None,
                 "max": round(self.max, 6) if self.count else None,
-                "p50": pick(0.50), "p90": pick(0.90), "p99": pick(0.99)}
+                "p50": _pick(ordered, 0.50), "p90": _pick(ordered, 0.90),
+                "p99": _pick(ordered, 0.99)}
 
 
 class MetricsRegistry:
@@ -143,12 +144,30 @@ class MetricsRegistry:
     # ---------------------------------------------------------- snapshot
     @staticmethod
     def _nest(tree: Dict, name: str, value) -> None:
+        """Nest one dotted metric name into the snapshot tree.
+
+        Leaf/branch name clashes (a counter ``"a"`` next to a gauge
+        ``"a.b"``, in either registration order) must not drop a metric:
+        the clashing value is recorded at the top level under its
+        *literal dotted name* instead of a nested path.  In the one case
+        where even that key is taken — a dotless name whose slot already
+        holds a branch — the literal key gets a ``"."`` suffix, so both
+        the branch and the scalar survive the snapshot."""
         parts = name.split(".")
         node = tree
+        clash = False
         for p in parts[:-1]:
-            node = node.setdefault(p, {})
-            if not isinstance(node, dict):       # leaf/branch name clash
-                return
+            nxt = node.setdefault(p, {})
+            if not isinstance(nxt, dict):        # prefix is already a leaf
+                clash = True
+                break
+            node = nxt
+        if not clash and isinstance(node.get(parts[-1]), dict):
+            clash = True                         # name is already a branch
+        if clash:
+            key = name if not isinstance(tree.get(name), dict) else name + "."
+            tree[key] = value
+            return
         node[parts[-1]] = value
 
     def snapshot(self) -> Dict:

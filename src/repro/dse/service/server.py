@@ -39,6 +39,7 @@ Run it::
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import json
@@ -46,8 +47,9 @@ import signal
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro import obs
 from repro.core.host_model import DEFAULT_HOST, HostModel
 from repro.dse.adaptive import AdaptiveDSE
 from repro.dse.backends import AnalysisBackend, CimBackend, TpuBackend
@@ -86,11 +88,19 @@ class DSEService:
     state in memory for the daemon's lifetime.  ``memo_limit`` bounds the
     priced-record memo (FIFO eviction).  Thread-safe throughout — the
     HTTP server hands every request its own thread.
+
+    ``tracing`` (default on) installs the process-global
+    :mod:`repro.obs` tracer: every POST opens a root span whose
+    ``trace_id`` is echoed in the NDJSON ``start`` event and the
+    ``X-Trace-Id`` response header, and the finished span tree is served
+    back by ``GET /v1/trace/<id>`` from a bounded ring of the last
+    ``trace_buffer`` traces.
     """
 
     def __init__(self, cache_dir: Optional[str] = None,
                  max_workers: int = 4, memo_limit: int = 1 << 18,
-                 host: HostModel = DEFAULT_HOST):
+                 host: HostModel = DEFAULT_HOST,
+                 tracing: bool = True, trace_buffer: int = 64):
         self.started_at = time.time()
         self.metrics = MetricsRegistry()
         self.store: Optional[AnalysisStore] = (
@@ -106,6 +116,23 @@ class DSEService:
         self._caches: Dict[str, AnalysisCache] = {
             name: AnalysisCache(store=self.store)
             for name in self._backends}
+        self.trace_buffer = trace_buffer
+        self._trace_lock = threading.Lock()
+        self._traces: "collections.OrderedDict[str, List[Dict]]" = \
+            collections.OrderedDict()  # lint: guarded-by(_trace_lock)
+        # remember whether tracing was ours to turn on, so close()
+        # restores the caller's state instead of clobbering it
+        self._owns_tracer = tracing and obs.tracer() is None
+        if tracing:
+            obs.enable()
+
+    def close(self) -> None:
+        """Release service-owned globals (the tracer, if this service
+        installed it).  Idempotent; the HTTP layer keeps working, new
+        requests just stop producing spans."""
+        if self._owns_tracer:
+            self._owns_tracer = False
+            obs.disable()
 
     # ------------------------------------------------------------ engines
     def engine(self, backend_name: str) -> DSEEngine:
@@ -127,40 +154,50 @@ class DSEService:
         """
         key = (backend.name, point.key)
         self.metrics.counter("points.requested")
-        with self._memo_lock:
-            hit = self._memo.get(key)
-        if hit is not None:
-            self.metrics.counter("points.memo_hits")
-            return dataclasses.replace(hit, index=point.index, round=0)
-
-        def build() -> SweepRecord:
-            rec = backend.evaluate(cache, point, host)
+        with obs.span("service.point", cat="engine", backend=backend.name,
+                      workload=point.workload) as sp:
             with self._memo_lock:
-                if len(self._memo) >= self.memo_limit:      # FIFO bound
-                    self._memo.pop(next(iter(self._memo)))
-                self._memo[key] = rec
-            self.metrics.counter("points.evaluated")
-            return rec
+                hit = self._memo.get(key)
+            if hit is not None:
+                self.metrics.counter("points.memo_hits")
+                sp.set(source="memo")
+                return dataclasses.replace(hit, index=point.index, round=0)
 
-        rec, coalesced = self._singleflight.do(key, build)
-        if coalesced:
-            self.metrics.counter("points.coalesced")
-        return dataclasses.replace(rec, index=point.index, round=0)
+            def build() -> SweepRecord:
+                rec = backend.evaluate(cache, point, host)
+                with self._memo_lock:
+                    if len(self._memo) >= self.memo_limit:  # FIFO bound
+                        self._memo.pop(next(iter(self._memo)))
+                    self._memo[key] = rec
+                self.metrics.counter("points.evaluated")
+                return rec
+
+            rec, coalesced = self._singleflight.do(key, build)
+            if coalesced:
+                self.metrics.counter("points.coalesced")
+            sp.set(source="coalesced" if coalesced else "evaluated")
+            return dataclasses.replace(rec, index=point.index, round=0)
 
     # ------------------------------------------------------------ queries
-    def handle_query(self, doc: Dict) -> Iterator[Dict]:
+    def handle_query(self, doc: Dict,
+                     trace_id: Optional[str] = None) -> Iterator[Dict]:
         """Parse + run one request, yielding NDJSON event dicts.
 
         ``start`` → (``round`` per adaptive refinement round) → ``result``.
         Raises :class:`~repro.dse.service.codec.RequestError` before the
         first yield for malformed requests (the HTTP layer maps it to a
-        400 **before** committing to a streamed 200).
+        400 **before** committing to a streamed 200).  ``trace_id`` (the
+        HTTP layer's root span, when tracing) is echoed in the ``start``
+        event so streaming clients can fetch ``/v1/trace/<id>`` later.
         """
         req = parse_request(doc)
         space, backend = req["space"], req["backend"]
         engine = self.engine(backend)
-        yield {"event": "start", "backend": backend, "mode": req["mode"],
-               "n_points": len(space), "n_analyses": space.n_analyses()}
+        start = {"event": "start", "backend": backend, "mode": req["mode"],
+                 "n_points": len(space), "n_analyses": space.n_analyses()}
+        if trace_id is not None:
+            start["trace_id"] = trace_id
+        yield start
         if req["mode"] == "adaptive":
             adaptive = AdaptiveDSE(space, engine=engine,
                                    objectives=req["objectives"],
@@ -197,6 +234,36 @@ class DSEService:
                 "records": records_json(results.records),
                 "frontier": records_json(frontier), **extra}
 
+    # ------------------------------------------------------------- traces
+    def finish_trace(self, trace_id: Optional[str]) -> None:
+        """Drain a finished request's spans out of the tracer into the
+        bounded ring buffer and roll their self-times into the metrics
+        (``obs.spans`` counter + per-stage ``obs.stage_self_s`` gauges)."""
+        t = obs.tracer()
+        if t is None or trace_id is None:
+            return
+        spans = t.take(trace_id)
+        if not spans:
+            return
+        with self._trace_lock:
+            self._traces[trace_id] = spans
+            while len(self._traces) > self.trace_buffer:
+                self._traces.popitem(last=False)
+        self.metrics.counter("obs.spans", len(spans))
+        att = obs.stage_attribution(spans)
+        for cat, st in att["stages"].items():
+            self.metrics.gauge_inc(f"obs.stage_self_s.{cat}",
+                                   round(st["self_s"], 6))
+
+    def trace_tree(self, trace_id: str) -> Optional[Dict]:
+        """The finished span tree of a recent request (or ``None``)."""
+        with self._trace_lock:
+            spans = self._traces.get(trace_id)
+        if spans is None:
+            return None
+        return {"trace_id": trace_id, "n_spans": len(spans),
+                "spans": obs.build_tree(spans)}
+
     # ------------------------------------------------------------ metrics
     def metrics_snapshot(self) -> Dict:
         doc = {
@@ -230,6 +297,12 @@ class DSEService:
         from repro.core import accel
         doc["accel"] = {"backend": accel.backend(),
                         "jit_compiles": accel.jit_compiles()}
+        t = obs.tracer()
+        with self._trace_lock:
+            buffered = len(self._traces)
+        doc["obs"] = {"tracing": t is not None,
+                      "buffered_traces": buffered,
+                      "dropped_spans": t.dropped if t is not None else 0}
         if self.store is not None:
             doc["store"] = self.store.stats()
             doc["store"]["corrupt_drops"] = self.store.corrupt_drops
@@ -257,12 +330,21 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
-    def _stream_ndjson(self, events: Iterator[Dict]) -> None:
+    def _stream_ndjson(self, events: Iterator[Dict],
+                       headers: Optional[Dict[str, str]] = None,
+                       on_complete: Optional[Callable[[], None]] = None
+                       ) -> None:
         """Chunked NDJSON: one event per line, flushed as produced, so a
-        client sees each ``round`` while later rounds are still running."""
+        client sees each ``round`` while later rounds are still running.
+
+        ``on_complete`` runs after the last event but *before* the
+        terminal chunk — a client that saw the stream end is guaranteed
+        its side effects (trace buffering) already happened."""
         self.send_response(200)
         self.send_header("Content-Type", "application/x-ndjson")
         self.send_header("Transfer-Encoding", "chunked")
+        for name, value in (headers or {}).items():
+            self.send_header(name, value)
         self.end_headers()
 
         def chunk(data: bytes) -> None:
@@ -278,6 +360,8 @@ class _Handler(BaseHTTPRequestHandler):
             # error travels in-band as a terminal event line
             chunk(json.dumps({"event": "error",
                               "error": str(exc)}).encode() + b"\n")
+        if on_complete is not None:
+            on_complete()
         self.wfile.write(b"0\r\n\r\n")
         self.wfile.flush()
 
@@ -293,6 +377,17 @@ class _Handler(BaseHTTPRequestHandler):
                 "backends": sorted(svc._backends)})
         elif path == "/metrics":
             self._send_json(200, self.service.metrics_snapshot())
+        elif path.startswith("/v1/trace/"):
+            trace_id = path.rsplit("/", 1)[1]
+            tree = self.service.trace_tree(trace_id)
+            if tree is None:
+                self._send_json(404, {"error": f"no buffered trace "
+                                               f"{trace_id!r} (finished "
+                                               f"traces are kept in a "
+                                               f"bounded ring)"})
+                return
+            self._send_json(200, tree)
+            path = "/trace"                  # one metric series, not per-id
         else:
             self._send_json(404, {"error": f"unknown path {path!r}"})
             return
@@ -310,6 +405,24 @@ class _Handler(BaseHTTPRequestHandler):
         t0 = time.perf_counter()
         svc.metrics.counter(f"requests.{endpoint}")
         svc.metrics.gauge_inc("inflight_requests")
+        # the request's root span: everything the handler thread (and the
+        # engine threads/processes it fans out to) does nests under it;
+        # trace_id is None when tracing is off (NULL_SPAN)
+        root = obs.span(f"http.{endpoint}", cat="service", endpoint=endpoint)
+        trace_id = root.trace_id
+        root.__enter__()
+        finished = False
+
+        def finish_request() -> None:
+            # close the root span + buffer the trace exactly once, before
+            # the client sees the stream terminate (so /v1/trace/<id>
+            # resolves the moment a reply is fully read)
+            nonlocal finished
+            if not finished:
+                finished = True
+                root.__exit__(None, None, None)
+                svc.finish_trace(trace_id)
+
         try:
             try:
                 length = int(self.headers.get("Content-Length", "0"))
@@ -320,14 +433,18 @@ class _Handler(BaseHTTPRequestHandler):
                 return
             doc["mode"] = endpoint           # the path, not the body, decides
             try:
-                events = svc.handle_query(doc)
+                events = svc.handle_query(doc, trace_id=trace_id)
                 first = next(events)         # parse errors surface here,
             except RequestError as exc:      # before the 200 is committed
                 svc.metrics.counter("requests.bad")
                 self._send_json(400, {"error": str(exc)})
                 return
-            self._stream_ndjson(_chain_first(first, events))
+            self._stream_ndjson(
+                _chain_first(first, events),
+                headers=({"X-Trace-Id": trace_id} if trace_id else None),
+                on_complete=finish_request)
         finally:
+            finish_request()
             svc.metrics.gauge_dec("inflight_requests")
             svc.metrics.observe(f"latency_s.{endpoint}",
                                 time.perf_counter() - t0)
@@ -370,6 +487,7 @@ def running_server(service: Optional[DSEService] = None,
         server.shutdown()
         server.server_close()
         thread.join(timeout=10)
+        service.close()      # restore the caller's tracing state
 
 
 # ======================================================================
@@ -391,10 +509,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="pricing fan-out threads per request")
     ap.add_argument("--verbose", action="store_true",
                     help="log every request to stderr")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable per-request span tracing "
+                         "(X-Trace-Id / GET /v1/trace/<id>)")
     args = ap.parse_args(argv)
 
     service = DSEService(cache_dir=args.cache_dir,
-                         max_workers=args.max_workers)
+                         max_workers=args.max_workers,
+                         tracing=not args.no_trace)
     server = make_server(service, host=args.host, port=args.port,
                          quiet=not args.verbose)
     bound_host, bound_port = server.server_address[:2]

@@ -68,6 +68,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.cache import CacheConfig, CacheHierarchy
 from repro.core.columnar import ColumnarTrace
 from repro.core.idg import FlowIndex
@@ -80,6 +81,14 @@ from repro.core.trace import (TRACE_VM_VERSION, StructuralTrace, TraceResult)
 STORE_FORMAT = 2
 # Bump when the layer-1 .npz column encoding changes.
 NPZ_FORMAT = 1
+
+
+def _fsize(path: pathlib.Path) -> int:
+    """On-disk size for span attribution; 0 when absent/unreadable."""
+    try:
+        return path.stat().st_size
+    except OSError:
+        return 0
 
 
 class StoreFormatError(RuntimeError):
@@ -251,17 +260,28 @@ class AnalysisStore:
     def load_blob(self, layer: int, spec: dict) -> Optional[dict]:
         key = self._key({"layer": layer, **spec})
         backend = str(spec.get("backend", "blob"))
-        payload = self._read(self._path(layer, key, backend), key)
-        if payload is None:
-            self._bump("l1_misses" if layer == 1 else "l2_misses")
-            return None
-        self._bump("l1_hits" if layer == 1 else "l2_hits")
-        return payload
+        path = self._path(layer, key, backend)
+        # span dur covers read + zlib inflate + pickle (see _read)
+        with obs.span("store.load_blob", cat="store", layer=layer,
+                      backend=backend) as sp:
+            payload = self._read(path, key)
+            if payload is None:
+                self._bump("l1_misses" if layer == 1 else "l2_misses")
+                sp.set(hit=False)
+                return None
+            self._bump("l1_hits" if layer == 1 else "l2_hits")
+            sp.set(hit=True, bytes=_fsize(path))
+            return payload
 
     def save_blob(self, layer: int, spec: dict, payload: dict) -> None:
         key = self._key({"layer": layer, **spec})
         backend = str(spec.get("backend", "blob"))
-        self._write(self._path(layer, key, backend), key, payload)
+        path = self._path(layer, key, backend)
+        # span dur covers pickle + zlib deflate + atomic publish
+        with obs.span("store.save_blob", cat="store", layer=layer,
+                      backend=backend) as sp:
+            self._write(path, key, payload)
+            sp.set(bytes=_fsize(path))
 
     # ---------------------------------------------------------------- io
     def _read(self, path: pathlib.Path, expect_key: str) -> Optional[dict]:
@@ -371,9 +391,18 @@ class AnalysisStore:
                     ) -> Optional[Tuple[TraceResult, Optional[FlowIndex]]]:
         key = self.layer1_key(workload, cache_levels)
         trace_path = self._path(1, key, suffix="npz")
+        # span dur covers read + zlib inflate + columnar rehydration
+        with obs.span("store.load_l1", cat="store", layer=1,
+                      workload=workload) as sp:
+            return self._load_layer1(cache_levels, key, trace_path, sp)
+
+    def _load_layer1(self, cache_levels: Sequence[CacheConfig], key: str,
+                     trace_path: pathlib.Path, sp
+                     ) -> Optional[Tuple[TraceResult, Optional[FlowIndex]]]:
         arrays = self._read_npz(trace_path, key)
         if arrays is None:
             self._bump("l1_misses")
+            sp.set(hit=False)
             return None
         try:
             ct = ColumnarTrace.from_arrays(arrays)
@@ -389,6 +418,7 @@ class AnalysisStore:
             # the filesystem or it would never be repaired
             self._drop(trace_path)
             self._bump("l1_misses")
+            sp.set(hit=False, corrupt=True)
             return None
         tr = TraceResult(ct, hier, outputs,
                          structural=StructuralTrace(ct, outputs))
@@ -400,6 +430,7 @@ class AnalysisStore:
             except Exception:
                 self._drop(self._flow_path(key))
         self._bump("l1_hits")
+        sp.set(hit=True, bytes=_fsize(trace_path) + _fsize(self._flow_path(key)))
         return tr, flow
 
     def save_layer1(self, workload: str, cache_levels: Sequence[CacheConfig],
@@ -407,38 +438,54 @@ class AnalysisStore:
                     flow: Optional[FlowIndex] = None) -> None:
         key = self.layer1_key(workload, cache_levels)
         trace_path = self._path(1, key, suffix="npz")
-        if not trace_path.exists():     # traces are deterministic per key:
-            arrays = trace_result.trace.to_arrays()
-            counters = trace_result.cache.counters()
-            arrays["meta_cc_names"] = np.asarray(list(counters), dtype="U")
-            arrays["meta_cc_vals"] = np.asarray(list(counters.values()),
-                                                np.int64)
-            arrays["meta_n_outputs"] = np.asarray(
-                [len(trace_result.outputs)], np.int64)
-            for i, out in enumerate(trace_result.outputs):
-                arrays[f"out_{i}"] = np.asarray(out)
-            self._write_npz(trace_path, key, arrays)
-        if flow is not None and not self._flow_path(key).exists():
-            self._write_npz(self._flow_path(key), key, flow.to_arrays())
+        # span dur covers columnar flatten + zlib deflate + atomic publish
+        with obs.span("store.save_l1", cat="store", layer=1,
+                      workload=workload) as sp:
+            if not trace_path.exists():  # traces are deterministic per key:
+                arrays = trace_result.trace.to_arrays()
+                counters = trace_result.cache.counters()
+                arrays["meta_cc_names"] = np.asarray(list(counters),
+                                                     dtype="U")
+                arrays["meta_cc_vals"] = np.asarray(list(counters.values()),
+                                                    np.int64)
+                arrays["meta_n_outputs"] = np.asarray(
+                    [len(trace_result.outputs)], np.int64)
+                for i, out in enumerate(trace_result.outputs):
+                    arrays[f"out_{i}"] = np.asarray(out)
+                self._write_npz(trace_path, key, arrays)
+            if flow is not None and not self._flow_path(key).exists():
+                self._write_npz(self._flow_path(key), key, flow.to_arrays())
+            sp.set(bytes=_fsize(trace_path) + _fsize(self._flow_path(key)))
 
     # ------------------------------------------------------------ layer 2
     def load_layer2(self, workload: str, cache_levels: Sequence[CacheConfig],
                     cfg: OffloadConfig
                     ) -> Optional[Tuple[OffloadResult, ReshapedTrace]]:
         key = self.layer2_key(workload, cache_levels, cfg)
-        payload = self._read(self._path(2, key), key)
-        if payload is None:
-            self._bump("l2_misses")
-            return None
-        self._bump("l2_hits")
-        return payload["offload"], payload["reshaped"]
+        path = self._path(2, key)
+        # span dur covers read + zlib inflate + pickle (see _read)
+        with obs.span("store.load_l2", cat="store", layer=2,
+                      workload=workload) as sp:
+            payload = self._read(path, key)
+            if payload is None:
+                self._bump("l2_misses")
+                sp.set(hit=False)
+                return None
+            self._bump("l2_hits")
+            sp.set(hit=True, bytes=_fsize(path))
+            return payload["offload"], payload["reshaped"]
 
     def save_layer2(self, workload: str, cache_levels: Sequence[CacheConfig],
                     cfg: OffloadConfig, offload: OffloadResult,
                     reshaped: ReshapedTrace) -> None:
         key = self.layer2_key(workload, cache_levels, cfg)
-        self._write(self._path(2, key), key,
-                    {"offload": offload, "reshaped": reshaped})
+        path = self._path(2, key)
+        # span dur covers pickle + zlib deflate + atomic publish
+        with obs.span("store.save_l2", cat="store", layer=2,
+                      workload=workload) as sp:
+            self._write(path, key,
+                        {"offload": offload, "reshaped": reshaped})
+            sp.set(bytes=_fsize(path))
 
     # -------------------------------------------------------------- misc
     def disk_usage(self) -> Dict[str, int]:

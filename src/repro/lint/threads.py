@@ -35,7 +35,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.lint.core import Finding, file_comments, is_disabled, parse_file, rel, register
 
 THREADED = ("src/repro/dse/service", "src/repro/dse/engine.py",
-            "src/repro/dse/store.py", "src/repro/ckpt/checkpoint.py")
+            "src/repro/dse/store.py", "src/repro/ckpt/checkpoint.py",
+            "src/repro/obs")
 
 _MUTATORS = {"append", "extend", "insert", "remove", "pop", "popitem",
              "clear", "update", "setdefault", "add", "discard",
