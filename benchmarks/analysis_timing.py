@@ -207,6 +207,16 @@ def run(workloads: Optional[Sequence[str]] = None,
         dt = totals[f"{stage}_s"]
         totals[f"{stage}_ips"] = (round(totals["n_instructions"] / dt)
                                   if dt else None)
+    # each stage's share of the (numpy-path) pipeline, so "X is the
+    # dominant stage" is generated from the measurement, never hand-written
+    pipeline = ("trace", "replay", "idg", "select", "price")
+    pipeline_s = sum(totals[f"{s}_s"] for s in pipeline)
+    totals["pipeline_s"] = round(pipeline_s, 4)
+    totals["share"] = {s: round(totals[f"{s}_s"] / pipeline_s, 3)
+                       for s in pipeline} if pipeline_s else {}
+    if totals["share"]:
+        totals["dominant_stage"] = max(totals["share"],
+                                       key=totals["share"].get)
 
     # ---- end-to-end: cold fig14-equivalent sweep (fresh engine) ---------
     space = SweepSpace(workloads=workloads, caches=FIG14_CACHES)
@@ -283,6 +293,11 @@ def main(workloads: Optional[Sequence[str]] = None,
               f"select {s['select_ips']:>9,}/s  "
               f"select-jax {s['select_jax_ips']:>9,}/s  "
               f"price {s['price_ips']:>10,}/s")
+    share = doc["totals"].get("share", {})
+    if share:
+        print("  stage shares: " + "  ".join(
+            f"{s} {frac:.1%}" for s, frac in share.items())
+            + f"  (dominant: {doc['totals']['dominant_stage']})")
     cold = doc["cold_sweep"]
     line = (f"  cold sweep: {cold['points']} points in {cold['wall_s']}s "
             f"({cold['instructions_per_s']:,} inst/s)")

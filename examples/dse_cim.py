@@ -54,9 +54,10 @@ import argparse
 import sys
 
 from repro import obs
-from repro.dse import (AdaptiveDSE, DSEEngine, HOST_PRESETS, StoreFormatError,
-                       SweepSpace, TPU_PRESETS, TpuBackend, TpuOption,
-                       parse_bytes)
+from repro.core.sampling import SamplingSpec
+from repro.dse import (AdaptiveDSE, CimBackend, DSEEngine, HOST_PRESETS,
+                       StoreFormatError, SweepSpace, TPU_PRESETS, TpuBackend,
+                       TpuOption, parse_bytes)
 from repro.workloads import WORKLOADS
 
 
@@ -98,6 +99,13 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-report", action="store_true",
                     help="enable span tracing and print the per-stage "
                          "attribution table after the run")
+    ap.add_argument("--sample", default=None, metavar="MODE[:k=v,...]",
+                    help="statistical sampling instead of exact analysis "
+                         "(CiM backend): 'stratified' or 'phase', with "
+                         "optional knobs, e.g. "
+                         "phase:interval=2048,budget=32. Sampled records "
+                         "carry bootstrap CI columns, and --workload "
+                         "accepts loop-scaled 'name@scale' variants")
     args = ap.parse_args(argv)
 
     # each backend owns some axes; mixing them is a mistake worth stopping
@@ -106,6 +114,10 @@ def main(argv=None) -> int:
         ap.error("--hosts sweeps host CPUs, a CiM-backend axis; the TPU "
                  "pipeline has no host axis. Drop --hosts or use "
                  "--backend cim.")
+    if args.backend == "tpu" and args.sample is not None:
+        ap.error("--sample draws windows from the CiM instruction trace; "
+                 "the TPU jaxpr/HLO pipeline has no trace to sample. Drop "
+                 "--sample or use --backend cim.")
     if args.backend == "cim":
         tpu_only = [flag for flag, val in (("--chips", args.chips),
                                            ("--thresholds", args.thresholds))
@@ -128,12 +140,23 @@ def main(argv=None) -> int:
     if args.backend == "tpu":
         return _tpu_main(args)
 
+    sampling = SamplingSpec()
+    if args.sample:
+        try:
+            sampling = SamplingSpec.parse(args.sample)
+        except ValueError as exc:
+            ap.error(f"bad --sample: {exc}")
     args.workload = args.workload or "KM"
-    if args.workload not in WORKLOADS:
+    base_workload = args.workload.partition("@")[0]
+    if base_workload not in WORKLOADS:
         ap.error(f"unknown workload {args.workload!r}; "
                  f"known: {sorted(WORKLOADS)}")
+    if "@" in args.workload and sampling.is_exact:
+        ap.error(f"loop-scaled workload {args.workload!r} needs --sample "
+                 f"(exact analysis only prices registry-sized workloads)")
     try:
-        engine = DSEEngine(executor=args.executor, store=args.cache_dir)
+        engine = DSEEngine(executor=args.executor, store=args.cache_dir,
+                           backend=CimBackend(sampling=sampling))
     except StoreFormatError as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2
@@ -145,6 +168,9 @@ def main(argv=None) -> int:
                        hosts=hosts)
     print(f"== {args.workload}: {len(space)} design points, "
           f"{space.n_analyses()} trace analyses ==")
+    if not sampling.is_exact:
+        print(f"   sampling: {sampling.key()} "
+              f"(metrics are estimates ± bootstrap CI)")
     if args.adaptive:
         adaptive = AdaptiveDSE(space, engine=engine).run()
         for line in adaptive.summary().splitlines():
@@ -219,7 +245,9 @@ def main(argv=None) -> int:
     front = results.pareto(("energy_improvement", "speedup"))
     print(f"== Pareto frontier (energy improvement vs speedup) ==")
     for r in front:
-        print(f"  {r.config_label:34s} E {r.energy_improvement:5.2f}x "
+        ci = (f" ±{r.energy_improvement_ci:.2f}" if r.sampling != "exact"
+              else "")
+        print(f"  {r.config_label:34s} E {r.energy_improvement:5.2f}x{ci} "
               f"spd {r.speedup:5.2f}x")
 
     if args.report:

@@ -1,0 +1,34 @@
+"""Stratified interval sampling of trace analysis (ROADMAP: "statistical
+trace sampling").
+
+Split a program's virtual instruction stream into fixed intervals, cluster
+them by cheap structural features (SimPoint-style phases, or contiguous
+strata), trace/replay/select/price only representative windows, and expand
+back to whole-program metrics with bootstrap error bars.  See
+:mod:`repro.core.sampling.spec` for the knob set and
+``docs/architecture.md`` ("Statistical sampling") for the estimator math.
+"""
+from repro.core.sampling.cluster import SamplePlan, build_plan
+from repro.core.sampling.estimate import (SampledEstimate, estimate,
+                                          estimate_reports,
+                                          window_components)
+from repro.core.sampling.machines import (SamplingInterpreter, SkimMachine,
+                                          SkimResult, WindowedMachine,
+                                          WindowedTrace, skim_program,
+                                          trace_windows)
+from repro.core.sampling.pipeline import (SampledAnalysis, SampledStructural,
+                                          attach_sampled, build_workload,
+                                          price_sampled, sampled_report,
+                                          sampled_structural, select_sampled,
+                                          slice_columns)
+from repro.core.sampling.spec import SAMPLING_VERSION, SamplingSpec
+
+__all__ = [
+    "SAMPLING_VERSION", "SamplingSpec", "SamplePlan", "build_plan",
+    "SampledEstimate", "estimate", "estimate_reports", "window_components",
+    "SamplingInterpreter", "SkimMachine", "SkimResult", "WindowedMachine",
+    "WindowedTrace", "skim_program", "trace_windows",
+    "SampledAnalysis", "SampledStructural", "attach_sampled",
+    "build_workload", "price_sampled", "sampled_report",
+    "sampled_structural", "select_sampled", "slice_columns",
+]

@@ -26,6 +26,7 @@ while the trace is emitted, exactly as the probes would.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -34,10 +35,10 @@ import jax.extend.core as jex_core
 import numpy as np
 
 from repro.core.cache import CacheConfig, CacheHierarchy, L1_32K, L2_256K
-from repro.core.columnar import ColumnarBuilder, ColumnarTrace
-from repro.core.isa import (DTYPE_CODE, OP_CODE, OP_LOAD, OP_STORE, SRC_IMM,
-                            SRC_REG, U_BRANCH, UNIT_CODE, Inst, Trace,
-                            unit_for)
+from repro.core.columnar import ColumnarBuilder, ColumnarTrace, _imm_kind
+from repro.core.isa import (DTYPE_CODE, IMM_FLOAT, IMM_INT, OP_CODE, OP_LOAD,
+                            OP_STORE, SRC_IMM, SRC_REG, U_BRANCH, UNIT_CODE,
+                            Inst, Trace, unit_for)
 
 # Version of the trace VM's *observable lowering semantics or artifact
 # encoding*.  Bump whenever a change alters the committed instruction
@@ -56,6 +57,30 @@ _MEM_RD_CODE = UNIT_CODE[unit_for("load", False)]
 _MEM_WR_CODE = UNIT_CODE[unit_for("store", False)]
 _BRANCH_CODE = UNIT_CODE[U_BRANCH]
 
+# pre-packed ColumnarBuilder meta fragments for the inlined scalar emitter
+# (see Machine.emit_scalar); the encodings mirror ColumnarBuilder.add
+_LOAD_META = OP_LOAD | _MEM_RD_CODE << 5
+_STORE_META = OP_STORE | _MEM_WR_CODE << 5
+_IMM_INT_SMETA = SRC_IMM | IMM_INT << 1
+
+
+# jit-compiled gather/scatter oracles, cached per static config: the eager
+# lax dispatch costs tens of microseconds per call, which dominates kernels
+# that hit these primitives once per loop iteration (mcf, astar); the jit
+# cache re-traces per operand shape and replays the compiled computation
+# after that — same XLA kernel the eager path runs, so values are bit-exact
+@functools.lru_cache(maxsize=None)
+def _jitted_gather(dnums, slice_sizes, mode):
+    return jax.jit(functools.partial(jax.lax.gather,
+                                     dimension_numbers=dnums,
+                                     slice_sizes=slice_sizes, mode=mode))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_scatter(is_add: bool, dnums, mode):
+    op = jax.lax.scatter_add if is_add else jax.lax.scatter
+    return jax.jit(functools.partial(op, dimension_numbers=dnums, mode=mode))
+
 # ======================================================================
 # Values: concrete data + an address map (None => immediate / generated)
 # ======================================================================
@@ -71,12 +96,26 @@ class Value:
         return self.addr is not None
 
 
+# dtype -> tag/itemsize are pure and the dtype universe is tiny; the
+# issubdtype/np.dtype machinery is measurably hot in scalar-heavy traces
+_TAG_CACHE: Dict[Any, str] = {}
+_SIZE_CACHE: Dict[Any, int] = {}
+
+
 def _dtype_tag(dt: np.dtype) -> str:
-    return "f" if np.issubdtype(dt, np.floating) else "i"
+    tag = _TAG_CACHE.get(dt)
+    if tag is None:
+        tag = "f" if np.issubdtype(dt, np.floating) else "i"
+        _TAG_CACHE[dt] = tag
+    return tag
 
 
 def _itemsize(dt: np.dtype) -> int:
-    return int(np.dtype(dt).itemsize)
+    size = _SIZE_CACHE.get(dt)
+    if size is None:
+        size = int(np.dtype(dt).itemsize)
+        _SIZE_CACHE[dt] = size
+    return size
 
 
 # ======================================================================
@@ -125,6 +164,16 @@ class Machine:
         self._ov_reg = self._free_regs.pop()            # reserved induction var
         self._reg_of_addr: "OrderedDict[int, int]" = OrderedDict()  # LRU
         self._addr_of_reg: Dict[int, int] = {}
+        # pre-built argument tuple for the (constant) loop-overhead agen op
+        self._ov_args = (OP_CODE["agen"], _UNIT_CODES["agen"][False], False,
+                         self._ov_reg, -1, 4,
+                         ((SRC_REG, self._ov_reg), (SRC_IMM, 4)))
+        # pre-packed meta words for the inlined scalar emitter
+        self._ov_meta = (OP_CODE["agen"] | _UNIT_CODES["agen"][False] << 5
+                         | (self._ov_reg + 1) << 10 | 4 << 18)
+        self._branch_meta = OP_CODE["branch"] | _BRANCH_CODE << 5 | 4 << 18
+        self._loops: List[dict] = []
+        self._scope_cache: Dict[Any, dict] = {}
 
     # ------------------------------------------------------------ arena
     # Loop-scoped buffer reuse: compiled loops keep their temporaries on the
@@ -137,10 +186,12 @@ class Machine:
     LOOP_REUSE_DEPTH = 3
 
     def alloc(self, shape: Tuple[int, ...], dt: np.dtype) -> np.ndarray:
-        n = int(np.prod(shape)) if shape else 1
+        n = 1
+        for s in shape:
+            n *= int(s)
         # temporaries pack like stack slots (8 B granularity); standalone
         # buffers outside loops stay line-aligned like heap allocations
-        in_loop = bool(getattr(self, "_loops", None))
+        in_loop = bool(self._loops)
         align = 7 if in_loop else 63
         size = (n * _itemsize(dt) + align) & ~align
         base = None
@@ -156,15 +207,15 @@ class Machine:
         if base is None:
             base = self._arena_top
             self._arena_top += size
+        if n == 1:
+            a = np.array(base, dtype=np.int64)
+            return a if not shape else a.reshape(shape)
         return (base + np.arange(n, dtype=np.int64) * _itemsize(dt)).reshape(shape)
 
     def push_loop(self, key=None) -> None:
         """Enter a loop body scope.  ``key`` (the loop jaxpr's id) resumes
         the scope across re-entry — an inner loop reuses the same stack
         slots on every run, exactly like a compiled loop nest."""
-        if not hasattr(self, "_loops"):
-            self._loops = []
-            self._scope_cache = {}
         if key is not None and key in self._scope_cache:
             scope = self._scope_cache[key]
             scope["cur"] = []
@@ -256,13 +307,87 @@ class Machine:
         """Per-element induction/addr-gen + amortized loop branch (UNROLL)."""
         if not self.loop_overhead:
             return
-        ov = self._ov_reg
-        self.b.add(OP_CODE["agen"], _UNIT_CODES["agen"][False], False, ov,
-                   -1, 4, ((SRC_REG, ov), (SRC_IMM, 4)))
+        self.b.add(*self._ov_args)
         self._check_limit()
         self._ov_count += 1
         if self._ov_count % self.UNROLL == 0:
             self.emit_branch()
+
+    def emit_scalar(self, op: str, tag: str, invals: Sequence["Value"],
+                    out_addr: int, osize: int) -> None:
+        """One whole scalar equation — loop overhead, operand loads, the op,
+        the store — emitted straight-line.
+
+        Byte-identical to ``emit_loop_overhead`` + ``emit_load``* +
+        ``emit_op`` + ``emit_store`` called in sequence; exists because
+        scalar-heavy kernels (LCS, mcf) lower ~1 committed instruction per
+        jaxpr equation and spend most of their trace time on the CPython
+        call overhead of that sequence.
+        """
+        b = self.b
+        meta_l, addr_l, srcn_l = b.meta, b.addr, b.src_n
+        smeta_l, sval_l = b.src_meta, b.src_val
+        n_new = 0
+        if self.loop_overhead:
+            meta_l.append(self._ov_meta)
+            addr_l.append(-1)
+            srcn_l.append(2)
+            smeta_l.append(SRC_REG)
+            sval_l.append(self._ov_reg)
+            smeta_l.append(_IMM_INT_SMETA)
+            sval_l.append(4.0)
+            n_new = 1
+            self._ov_count += 1
+            if self._ov_count % self.UNROLL == 0:
+                meta_l.append(self._branch_meta)
+                addr_l.append(-1)
+                srcn_l.append(0)
+                n_new = 2
+        reg_of_addr = self._reg_of_addr
+        op_smeta: List[int] = []
+        op_sval: List[float] = []
+        for v in invals:
+            if v.addr is None:
+                d = v.data.item()
+                t = type(d)
+                kind = (IMM_INT if t is int else
+                        IMM_FLOAT if t is float else _imm_kind(d))
+                op_smeta.append(SRC_IMM | kind << 1)
+                op_sval.append(float(d))
+            else:
+                a = v.addr.item()
+                reg = reg_of_addr.get(a)
+                if reg is not None:
+                    reg_of_addr.move_to_end(a)      # load elided (Fig.4c)
+                else:
+                    dt = v.data.dtype
+                    reg = self._alloc_reg()
+                    meta_l.append(_LOAD_META | (_dtype_tag(dt) == "f") << 9
+                                  | (reg + 1) << 10 | _itemsize(dt) << 18)
+                    addr_l.append(a)
+                    srcn_l.append(1)
+                    smeta_l.append(_IMM_INT_SMETA)
+                    sval_l.append(float(a))
+                    n_new += 1
+                    self._bind(a, reg)
+                op_smeta.append(SRC_REG)
+                op_sval.append(reg)
+        is_f = tag == "f"
+        rd = self._alloc_reg()
+        meta_l.append(OP_CODE[op] | _UNIT_CODES[op][is_f] << 5 | is_f << 9
+                      | (rd + 1) << 10 | 4 << 18)
+        addr_l.append(-1)
+        srcn_l.append(len(op_smeta))
+        smeta_l.extend(op_smeta)
+        sval_l.extend(op_sval)
+        meta_l.append(_STORE_META | is_f << 9 | osize << 18)
+        addr_l.append(out_addr)
+        srcn_l.append(1)
+        smeta_l.append(SRC_REG)
+        sval_l.append(rd)
+        b.n += n_new + 2
+        self._bind(out_addr, rd)
+        self._check_limit()
 
     # ------------------------------------------------- value-level helpers
     def materialize(self, val: Value) -> Value:
@@ -330,6 +455,17 @@ _NP_UNOP = {
     "is_finite": np.isfinite, "square": np.square, "cbrt": np.cbrt,
 }
 
+# pre-joined dispatch tables: prim -> (vm op, numpy oracle).  The dict
+# unions used to be rebuilt on every equation, which dominated dispatch
+# for scalar-heavy traces where each eqn emits only a couple instructions.
+_EW_OPS = {**_ELEMENTWISE, **_COMPARE}
+_EW_BINOP = {p: (_EW_OPS[p], _NP_BINOP[p]) for p in _NP_BINOP if p in _EW_OPS}
+_EW_UNOP = {p: (_ELEMENTWISE[p], _NP_UNOP[p])
+            for p in _NP_UNOP if p in _ELEMENTWISE}
+_CALL_PRIMS = frozenset((
+    "pjit", "jit", "closed_call", "core_call", "custom_jvp_call",
+    "custom_vjp_call", "checkpoint", "remat", "custom_vjp_call_jaxpr"))
+
 
 class TraceInterpreter:
     def __init__(self, machine: Machine):
@@ -383,16 +519,36 @@ class TraceInterpreter:
         tag = _dtype_tag(out_data.dtype)
         osize = _itemsize(out_data.dtype)
         n = out_data.size
+        if n == 1:
+            # scalar fast path: pointer-heavy kernels (LCS, mcf) lower almost
+            # every jaxpr equation to one committed instruction, so the
+            # broadcast/ravel/tolist mirrors below dominate their trace time
+            m.emit_scalar(op, tag, invals, out_addr.item(), osize)
+            return Value(out_data, out_addr)
         # broadcast source addr/data maps to the output shape; plain-list
-        # mirrors make the per-element emission loop scalar-cheap
+        # mirrors make the per-element emission loop scalar-cheap.  Sources
+        # already output-shaped (the common case) skip the broadcast;
+        # size-1 sources splat without touching numpy per element.
         srcs_flat = []
         for v in invals:
-            data = np.broadcast_to(np.asarray(v.data), out_data.shape)
-            addr = (np.broadcast_to(v.addr, out_data.shape).ravel().tolist()
-                    if v.addr is not None else None)
-            srcs_flat.append((data.ravel().tolist(), addr,
-                              _dtype_tag(np.asarray(v.data).dtype),
-                              _itemsize(np.asarray(v.data).dtype)))
+            data = np.asarray(v.data)
+            if data.shape == out_data.shape:
+                flat_d = data.ravel().tolist()
+            elif data.size == 1:
+                flat_d = [data.ravel()[0].item()] * n
+            else:
+                flat_d = np.broadcast_to(data, out_data.shape).ravel().tolist()
+            if v.addr is None:
+                flat_a = None
+            elif v.addr.shape == out_data.shape:
+                flat_a = v.addr.ravel().tolist()
+            elif v.addr.size == 1:
+                flat_a = [int(v.addr.ravel()[0])] * n
+            else:
+                flat_a = np.broadcast_to(v.addr,
+                                         out_data.shape).ravel().tolist()
+            srcs_flat.append((flat_d, flat_a, _dtype_tag(data.dtype),
+                              _itemsize(data.dtype)))
         oaddr_flat = out_addr.ravel().tolist()
         emit_overhead = m.emit_loop_overhead
         emit_load, emit_op, emit_store = m.emit_load, m.emit_op, m.emit_store
@@ -585,9 +741,76 @@ class TraceInterpreter:
         prim = eqn.primitive.name
         params = eqn.params
 
+        # ---- elementwise binaries / unaries (hottest dispatch first: every
+        # branch below keys on disjoint prim names, so order is free) -------
+        ew = _EW_BINOP.get(prim)
+        if ew is not None:
+            op, np_fn = ew
+            out = np_fn(np.asarray(invals[0].data), np.asarray(invals[1].data))
+            out = np.asarray(out, dtype=eqn.outvars[0].aval.dtype)
+            return [self._elementwise(op, invals, out)]
+        ew = _EW_UNOP.get(prim)
+        if ew is not None:
+            op, np_fn = ew
+            out = np_fn(np.asarray(invals[0].data))
+            out = np.asarray(out, dtype=eqn.outvars[0].aval.dtype)
+            return [self._elementwise(op, invals, out)]
+
+        # ---- views: no instructions --------------------------------------
+        if prim in ("reshape", "squeeze", "expand_dims"):
+            shape = params.get("new_sizes") or params.get("shape") or \
+                eqn.outvars[0].aval.shape
+            v = invals[0]
+            return [Value(np.asarray(v.data).reshape(shape),
+                          v.addr.reshape(shape) if v.addr is not None else None)]
+        if prim == "dynamic_slice":
+            operand, *starts = invals
+            sizes = params["slice_sizes"]
+            st = [int(s.data) for s in starts]
+            st = [max(0, min(s, operand.data.shape[i] - sizes[i]))
+                  for i, s in enumerate(st)]
+            sl = tuple(slice(s, s + z) for s, z in zip(st, sizes))
+            v = invals[0]
+            # runtime offset: the slice is a view, address-arith is implicit
+            return [Value(np.asarray(v.data)[sl],
+                          v.addr[sl] if v.addr is not None else None)]
+        if prim == "select_n":
+            # pure element selection — numpy is bit-exact with XLA here, and
+            # skipping the per-eqn dispatch matters inside scan/while bodies
+            pred, *cases = invals
+            pd = np.asarray(pred.data)
+            cds = [np.asarray(c.data) for c in cases]
+            if pd.dtype == bool and len(cds) == 2:
+                out = np.where(pd, cds[1], cds[0])
+            elif len(cds) < 32:                    # np.choose's arity limit
+                out = np.choose(pd.astype(np.int64), cds)
+            else:
+                out = jax.lax.select_n(pd, *cds)
+            return [self._elementwise("sel", [pred] + list(cases),
+                                      np.asarray(out))]
+        if prim == "broadcast_in_dim":
+            shape = params["shape"]
+            bdims = params["broadcast_dimensions"]
+            v = invals[0]
+            src = np.asarray(v.data)
+            expand = [1] * len(shape)
+            for i, d in enumerate(bdims):
+                expand[d] = src.shape[i]
+            data = np.broadcast_to(src.reshape(expand), shape)
+            addr = (np.broadcast_to(v.addr.reshape(expand), shape)
+                    if v.addr is not None else None)
+            return [Value(data, addr)]
+        if prim == "convert_element_type":
+            new_dt = params["new_dtype"]
+            v = invals[0]
+            out = np.asarray(v.data).astype(new_dt)
+            if v.addr is None:
+                return [Value(out, None)]
+            # conversion happens in-register per element (mov)
+            return [self._elementwise("mov", [v], out)]
+
         # ---- call-like: inline ------------------------------------------
-        if prim in ("pjit", "jit", "closed_call", "core_call", "custom_jvp_call",
-                    "custom_vjp_call", "checkpoint", "remat", "custom_vjp_call_jaxpr"):
+        if prim in _CALL_PRIMS:
             sub = params.get("jaxpr") or params.get("call_jaxpr")
             if hasattr(sub, "jaxpr"):
                 return self.run(sub.jaxpr, sub.consts, list(invals))
@@ -601,25 +824,6 @@ class TraceInterpreter:
         if prim == "cond":
             return self._cond(eqn, invals)
 
-        # ---- views: no instructions --------------------------------------
-        if prim in ("reshape", "squeeze", "expand_dims"):
-            shape = params.get("new_sizes") or params.get("shape") or \
-                eqn.outvars[0].aval.shape
-            v = invals[0]
-            return [Value(np.asarray(v.data).reshape(shape),
-                          v.addr.reshape(shape) if v.addr is not None else None)]
-        if prim == "broadcast_in_dim":
-            shape = params["shape"]
-            bdims = params["broadcast_dimensions"]
-            v = invals[0]
-            src = np.asarray(v.data)
-            expand = [1] * len(shape)
-            for i, d in enumerate(bdims):
-                expand[d] = src.shape[i]
-            data = np.broadcast_to(src.reshape(expand), shape)
-            addr = (np.broadcast_to(v.addr.reshape(expand), shape)
-                    if v.addr is not None else None)
-            return [Value(data, addr)]
         if prim == "transpose":
             perm = params["permutation"]
             v = invals[0]
@@ -642,15 +846,6 @@ class TraceInterpreter:
         if prim in ("stop_gradient", "copy"):
             return [invals[0]]
 
-        if prim == "convert_element_type":
-            new_dt = params["new_dtype"]
-            v = invals[0]
-            out = np.asarray(v.data).astype(new_dt)
-            if v.addr is None:
-                return [Value(out, None)]
-            # conversion happens in-register per element (mov)
-            return [self._elementwise("mov", [v], out)]
-
         if prim == "iota":
             shape = eqn.outvars[0].aval.shape
             dt = eqn.outvars[0].aval.dtype
@@ -663,36 +858,12 @@ class TraceInterpreter:
             return [Value(data, None)]                  # generated: immediates
 
         # ---- select / clamp ----------------------------------------------
-        if prim == "select_n":
-            # pure element selection — numpy is bit-exact with XLA here, and
-            # skipping the per-eqn dispatch matters inside scan/while bodies
-            pred, *cases = invals
-            pd = np.asarray(pred.data)
-            cds = [np.asarray(c.data) for c in cases]
-            if pd.dtype == bool and len(cds) == 2:
-                out = np.where(pd, cds[1], cds[0])
-            elif len(cds) < 32:                    # np.choose's arity limit
-                out = np.choose(pd.astype(np.int64), cds)
-            else:
-                out = jax.lax.select_n(pd, *cds)
-            return [self._elementwise("sel", [pred] + list(cases),
-                                      np.asarray(out))]
         if prim == "clamp":
             lo, x, hi = invals
             out = np.clip(np.asarray(x.data), np.asarray(lo.data),
                           np.asarray(hi.data))
             return [self._elementwise("sel", [lo, x, hi], np.asarray(out))]
 
-        # ---- elementwise binaries / unaries --------------------------------
-        if prim in _NP_BINOP and prim in (_ELEMENTWISE | _COMPARE):
-            op = (_ELEMENTWISE | _COMPARE)[prim]
-            out = _NP_BINOP[prim](np.asarray(invals[0].data), np.asarray(invals[1].data))
-            out = np.asarray(out, dtype=eqn.outvars[0].aval.dtype)
-            return [self._elementwise(op, invals, out)]
-        if prim in _NP_UNOP and prim in _ELEMENTWISE:
-            out = _NP_UNOP[prim](np.asarray(invals[0].data))
-            out = np.asarray(out, dtype=eqn.outvars[0].aval.dtype)
-            return [self._elementwise(_ELEMENTWISE[prim], invals, out)]
         if prim == "integer_pow":
             y = params["y"]
             out = np.power(np.asarray(invals[0].data), y)
@@ -769,34 +940,24 @@ class TraceInterpreter:
 
         if prim == "gather":
             operand, indices = invals
-            out = np.asarray(jax.lax.gather(
-                np.asarray(operand.data), np.asarray(indices.data),
+            out = np.asarray(_jitted_gather(
                 params["dimension_numbers"], params["slice_sizes"],
-                mode=params.get("mode")))
+                params.get("mode"))(np.asarray(operand.data),
+                                    np.asarray(indices.data)))
             if operand.addr is None:
                 return [self._copy_to_new_buffer(Value(out, None), out)]
             # gather flat element ids (int32, x64-safe), then map to addresses
             ids = np.arange(np.asarray(operand.data).size,
                             dtype=np.int32).reshape(np.asarray(operand.data).shape)
-            gids = np.asarray(jax.lax.gather(
-                ids, np.asarray(indices.data), params["dimension_numbers"],
-                params["slice_sizes"], mode=jax.lax.GatherScatterMode.CLIP))
+            gids = np.asarray(_jitted_gather(
+                params["dimension_numbers"], params["slice_sizes"],
+                jax.lax.GatherScatterMode.CLIP)(ids,
+                                                np.asarray(indices.data)))
             gaddr = operand.addr.ravel()[gids.ravel()].reshape(out.shape)
             return [self._gather_pointer_chase(operand, out, gaddr, indices)]
         if prim in ("scatter", "scatter-add", "scatter_add"):
             return [self._scatter(eqn, invals)]
 
-        if prim == "dynamic_slice":
-            operand, *starts = invals
-            sizes = params["slice_sizes"]
-            st = [int(np.asarray(s.data)) for s in starts]
-            st = [max(0, min(s, operand.data.shape[i] - sizes[i]))
-                  for i, s in enumerate(st)]
-            sl = tuple(slice(s, s + z) for s, z in zip(st, sizes))
-            v = invals[0]
-            # runtime offset: the slice is a view, address-arith is implicit
-            return [Value(np.asarray(v.data)[sl],
-                          v.addr[sl] if v.addr is not None else None)]
         if prim == "dynamic_update_slice":
             operand, update, *starts = invals
             st = [int(np.asarray(s.data)) for s in starts]
@@ -890,17 +1051,17 @@ class TraceInterpreter:
         base = operand if operand.addr is not None else self.m.materialize(operand)
         # destination flat ids via a marker scatter (x64-safe int32 trick);
         # duplicate destinations keep the last writer — pricing approximation.
-        marker = np.asarray(jax.lax.scatter(
+        marker = np.asarray(_jitted_scatter(
+            False, dnums, jax.lax.GatherScatterMode.CLIP)(
             np.full(od.shape, -1, np.int32), idx,
-            np.arange(ud.size, dtype=np.int32).reshape(ud.shape), dnums,
-            mode=jax.lax.GatherScatterMode.CLIP))
+            np.arange(ud.size, dtype=np.int32).reshape(ud.shape)))
         dest_flat = np.full(ud.size, -1, np.int64)
         mk = marker.ravel()
         sel = mk >= 0
         dest_flat[mk[sel]] = np.nonzero(sel)[0]
         if is_add:
-            res = np.asarray(jax.lax.scatter_add(
-                od, idx, ud, dnums, mode=jax.lax.GatherScatterMode.CLIP))
+            res = np.asarray(_jitted_scatter(
+                True, dnums, jax.lax.GatherScatterMode.CLIP)(od, idx, ud))
         else:
             # plain scatter: the marker already resolved the written cells
             # (and their last writer), so the result is one fancy-index

@@ -41,6 +41,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 from repro import obs
 from repro.core.host_model import HostModel
 from repro.core.profiler import profile_system
+from repro.core.sampling.spec import SAMPLING_VERSION, SamplingSpec
 from repro.core.tpu_model import TpuChip, roofline_terms, step_energy_pj
 from repro.dse.results import SweepRecord
 from repro.dse.space import HostOption, SweepPoint, TpuOption
@@ -145,7 +146,19 @@ class CimBackend(AnalysisBackend):
     geometry) costs one access-stream replay after the first geometry
     (the structural interpretation is shared), and ``price`` is a
     vectorized column scan.
+
+    ``sampling`` (default exact) swaps the whole pipeline for its sampled
+    counterpart (:mod:`repro.core.sampling.pipeline`): ``analyze`` becomes
+    skim → plan → windowed trace (persisted once per (workload, sampling
+    key), independent of geometry) plus one warm-chained replay per
+    geometry, ``select`` runs Algorithm 1 per sampled window, and
+    ``price`` returns the cluster-weighted estimate with bootstrap CI
+    columns.  Exact mode touches none of the sampled code paths —
+    records, counters, and cache keys are byte-for-byte the pre-sampling
+    ones.
     """
+
+    sampling: SamplingSpec = SamplingSpec()
 
     name = "cim"
 
@@ -154,15 +167,29 @@ class CimBackend(AnalysisBackend):
         from repro.core.trace import TRACE_VM_VERSION
         return TRACE_VM_VERSION
 
+    @property
+    def variant(self) -> Optional[str]:
+        """Memo-key discriminator for engines/services that share one
+        process-wide cache across differently-configured backends:
+        ``None`` for exact (the pre-sampling identity), else the
+        sampling key."""
+        return None if self.sampling.is_exact else self.sampling.key()
+
     def analyze(self, cache, point: SweepPoint):
-        return cache.trace(point.workload, point.cache)
+        if self.sampling.is_exact:
+            return cache.trace(point.workload, point.cache)
+        return self._sampled_analysis(cache, point, self.sampling)
 
     def warm_many(self, cache, points: Sequence[SweepPoint]) -> None:
         """Batch the warm pass per workload: under ``EVA_CIM_ACCEL=jax``
         all cache geometries of one workload replay in a single vmapped
-        kernel launch (:meth:`AnalysisCache.replay_group`)."""
+        kernel launch (:meth:`AnalysisCache.replay_group`).  Sampled
+        backends always take the serial path — the skim/window pass, not
+        the replay, dominates, and it runs once per workload either
+        way."""
         from repro.core import accel
-        if accel.enabled() and hasattr(cache, "replay_group"):
+        if (self.sampling.is_exact and accel.enabled()
+                and hasattr(cache, "replay_group")):
             by_wl: Dict[str, list] = {}
             for p in points:
                 by_wl.setdefault(p.workload, []).append(p.cache)
@@ -173,8 +200,15 @@ class CimBackend(AnalysisBackend):
             self.warm(cache, p)
 
     def select(self, cache, point: SweepPoint, analysis):
-        return cache.offload(point.workload, point.cache,
-                             point.offload_config())
+        if self.sampling.is_exact:
+            return cache.offload(point.workload, point.cache,
+                                 point.offload_config())
+        from repro.core.sampling import pipeline as spl
+        cfg = point.offload_config()
+        return cache.artifact(
+            2, ("cim.sampled", point.workload, self.sampling.key(),
+                point.cache.levels, cfg),
+            lambda: spl.select_sampled(analysis, cfg))
 
     def price(self, point: SweepPoint, analysis, selection,
               host: HostModel) -> SweepRecord:
@@ -184,10 +218,81 @@ class CimBackend(AnalysisBackend):
         else:
             # collision-safe label for a custom engine-default model too
             name = HostOption.of(host).name
+        if not self.sampling.is_exact:
+            from repro.core.sampling import pipeline as spl
+            est = spl.price_sampled(analysis, selection, self.sampling,
+                                    tech=point.tech, host=host)
+            return self._record_from_estimate(point, est, host, name)
         result, reshaped = selection
         rep = profile_system(analysis, tech=point.tech, host=host,
                              offload=result, reshaped=reshaped)
         return SweepRecord.from_report(point, rep, host=host, host_name=name)
+
+    # ------------------------------------------------------- sampled path
+    def _sampled_structural(self, cache, workload: str, spec: SamplingSpec):
+        from repro.core.sampling import pipeline as spl
+        skey = spec.key()
+        return cache.artifact(
+            1, ("cim.sampled", workload, skey),
+            lambda: spl.sampled_structural(workload, spec),
+            store_spec={"backend": "cim.sampled", "version": self.version,
+                        "sampling_version": SAMPLING_VERSION,
+                        "workload": workload, "sampling": skey})
+
+    def _sampled_analysis(self, cache, point: SweepPoint,
+                          spec: SamplingSpec):
+        from repro.core.sampling import pipeline as spl
+        ss = self._sampled_structural(cache, point.workload, spec)
+        # per-geometry replay is memo-only: cheap to rebuild, and the
+        # artifact holds a live CacheHierarchy
+        return cache.artifact(
+            1, ("cim.sampled.geo", point.workload, spec.key(),
+                point.cache.levels),
+            lambda: spl.attach_sampled(ss, point.cache.levels))
+
+    def _record_from_estimate(self, point: SweepPoint, est, host: HostModel,
+                              host_name: str) -> SweepRecord:
+        t, m, ci = est.totals, est.metrics, est.ci
+        return SweepRecord(
+            index=point.index, workload=point.workload,
+            cache=point.cache.name,
+            cim_levels="+".join(point.cim_levels),
+            tech=point.tech, cim_set=point.cim_set, host=host_name,
+            energy_improvement=m["energy_improvement"],
+            speedup=m["speedup"], macr=m["macr"], macr_l1=m["macr_l1"],
+            base_energy_pj=t["base_energy"], cim_energy_pj=t["cim_energy"],
+            base_cycles=t["base_cycles"], cim_cycles=t["cim_cycles"],
+            base_runtime_ms=host.runtime_ms(t["base_cycles"]),
+            cim_runtime_ms=host.runtime_ms(t["cim_cycles"]),
+            processor_ratio=m["processor_ratio"],
+            cache_ratio=m["cache_ratio"],
+            n_instructions=int(round(t["n_instructions"])),
+            n_mem_accesses=int(round(t["mem_accesses"])),
+            n_candidates=int(round(t["n_candidates"])),
+            n_cim_ops=int(round(t["n_cim_ops"])),
+            backend=self.name, sampling=self.sampling.key(),
+            energy_improvement_ci=ci["energy_improvement"],
+            speedup_ci=ci["speedup"], macr_ci=ci["macr"])
+
+    def evaluate(self, cache, point: SweepPoint,
+                 host: HostModel) -> SweepRecord:
+        rec = super().evaluate(cache, point, host)
+        spec = self.sampling
+        if spec.is_exact or not spec.target_ci:
+            return rec
+        # CI-driven refinement: double the window budget (<= 3 times)
+        # until the energy estimate's relative CI half-width meets the
+        # target.  Each refined spec has its own cache identity, so
+        # re-evaluations of the same point converge to cache hits.
+        for _ in range(3):
+            rel = (rec.energy_improvement_ci
+                   / max(abs(rec.energy_improvement), 1e-9))
+            if rel <= spec.target_ci:
+                break
+            spec = dataclasses.replace(spec, budget=spec.budget * 2)
+            refined = dataclasses.replace(self, sampling=spec)
+            rec = AnalysisBackend.evaluate(refined, cache, point, host)
+        return rec
 
 
 # ======================================================================

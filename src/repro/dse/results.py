@@ -66,6 +66,16 @@ class SweepRecord:
     # `cache` holds the chip label, `cim_levels` is "VMEM", `cim_set` the
     # fusion threshold, and the cycle columns the roofline bound in ns
     backend: str = "cim"
+    # sampling identity: "exact", or the SamplingSpec.key() the metrics
+    # were estimated under; sampled records carry bootstrap CI half-widths
+    # for the three headline metrics (repro.core.sampling.estimate)
+    sampling: str = "exact"
+    energy_improvement_ci: float = 0.0
+    speedup_ci: float = 0.0
+    macr_ci: float = 0.0
+
+    _SAMPLING_KEYS = ("sampling", "energy_improvement_ci", "speedup_ci",
+                      "macr_ci")
 
     @classmethod
     def from_report(cls, point: SweepPoint, rep: SystemReport,
@@ -107,7 +117,14 @@ class SweepRecord:
         )
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        """Exact records drop the sampling columns entirely, so every
+        pre-sampling artifact (fig12–17 JSON, sweep reports) stays
+        byte-identical; sampled records carry them."""
+        d = dataclasses.asdict(self)
+        if self.sampling == "exact":
+            for k in self._SAMPLING_KEYS:
+                del d[k]
+        return d
 
     @property
     def config_label(self) -> str:

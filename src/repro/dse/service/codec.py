@@ -30,6 +30,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.sampling.spec import SamplingSpec
 from repro.dse.results import SweepRecord
 from repro.dse.space import SweepSpace, TpuOption, parse_bytes
 from repro.core.tpu_model import TPU_PRESETS
@@ -94,15 +95,44 @@ def parse_request(doc: Dict) -> Dict:
         raise RequestError(f"unknown mode {mode!r}; known: "
                            f"{list(VALID_MODES)}")
 
+    # statistical sampling: "sampling" is either a SamplingSpec object
+    # ({"mode": "phase", "interval": 2048, ...}) or the CLI string form
+    # ("phase:interval=2048,budget=32"); CiM-only — the TPU pipeline has
+    # no trace to sample
+    sampling = SamplingSpec()
+    if doc.get("sampling") is not None:
+        if backend == "tpu":
+            raise RequestError("'sampling' is meaningless with backend "
+                               "'tpu'; the jaxpr/HLO analysis has no "
+                               "instruction trace to sample")
+        raw = doc["sampling"]
+        try:
+            sampling = (SamplingSpec.parse(raw) if isinstance(raw, str)
+                        else SamplingSpec.from_dict(raw))
+        except ValueError as exc:
+            raise RequestError(f"bad 'sampling': {exc}") from exc
+
     workloads = _str_tuple(doc, "workloads")
     if workloads is None:
         raise RequestError("'workloads' is required")
     if backend == "cim":
         from repro.workloads import WORKLOADS
-        unknown = [w for w in workloads if w not in WORKLOADS]
+        unknown = [w for w in workloads if w.partition("@")[0]
+                   not in WORKLOADS]
         if unknown:
             raise RequestError(f"unknown workload(s) {unknown}; "
                                f"known: {sorted(WORKLOADS)}")
+        scaled = [w for w in workloads if "@" in w]
+        for w in scaled:
+            tail = w.partition("@")[2]
+            if not tail.isdigit() or int(tail) < 1:
+                raise RequestError(f"bad workload scale in {w!r}; "
+                                   f"expected 'name@positive_int'")
+        if scaled and sampling.is_exact:
+            raise RequestError(
+                f"loop-scaled workload(s) {scaled} ('name@scale') need "
+                f"'sampling' — exact analysis only prices registry-sized "
+                f"workloads")
     else:
         from repro.configs.registry import ARCHS
         unknown = [w for w in workloads if w not in ARCHS]
@@ -153,7 +183,8 @@ def parse_request(doc: Dict) -> Dict:
         raise RequestError("'max_rounds' must be a non-negative integer")
 
     return {"backend": backend, "mode": mode, "space": space,
-            "objectives": objectives, "max_rounds": max_rounds}
+            "objectives": objectives, "max_rounds": max_rounds,
+            "sampling": sampling}
 
 
 def records_json(records: Sequence[SweepRecord]) -> List[Dict]:

@@ -135,10 +135,16 @@ class DSEService:
             obs.disable()
 
     # ------------------------------------------------------------ engines
-    def engine(self, backend_name: str) -> DSEEngine:
+    def engine(self, backend_name: str,
+               backend_obj: Optional[AnalysisBackend] = None) -> DSEEngine:
         """A fresh engine view over the shared per-backend cache — cheap,
-        one per request, so concurrent runs never share executor state."""
-        return _CoalescingEngine(self, self._backends[backend_name],
+        one per request, so concurrent runs never share executor state.
+        ``backend_obj`` substitutes a per-request configuration of the
+        named backend (e.g. a sampled :class:`CimBackend`) while keeping
+        the shared cache — artifact keys carry the sampling identity, so
+        variants coexist in one cache without collisions."""
+        return _CoalescingEngine(self, backend_obj
+                                 or self._backends[backend_name],
                                  self._caches[backend_name],
                                  self.max_workers)
 
@@ -148,12 +154,17 @@ class DSEService:
         """Memo → single-flight → backend pipeline, in that order.
 
         The memo key is the point's canonical design identity plus the
-        backend name — ``index`` and ``round`` are positional metadata,
+        backend name and its variant (the sampling key for sampled CiM
+        backends — a sampled estimate must never satisfy an exact query,
+        or vice versa) — ``index`` and ``round`` are positional metadata,
         re-stamped per request, so one priced record serves every request
         that ever asks for that design.
         """
-        key = (backend.name, point.key)
+        variant = getattr(backend, "variant", None)
+        key = (backend.name, variant, point.key)
         self.metrics.counter("points.requested")
+        if variant is not None:
+            self.metrics.counter("points.sampled")
         with obs.span("service.point", cat="engine", backend=backend.name,
                       workload=point.workload) as sp:
             with self._memo_lock:
@@ -192,9 +203,16 @@ class DSEService:
         """
         req = parse_request(doc)
         space, backend = req["space"], req["backend"]
-        engine = self.engine(backend)
+        sampling = req["sampling"]
+        backend_obj = None
+        if backend == "cim" and not sampling.is_exact:
+            backend_obj = dataclasses.replace(self._backends["cim"],
+                                              sampling=sampling)
+        engine = self.engine(backend, backend_obj)
         start = {"event": "start", "backend": backend, "mode": req["mode"],
                  "n_points": len(space), "n_analyses": space.n_analyses()}
+        if not sampling.is_exact:
+            start["sampling"] = sampling.key()
         if trace_id is not None:
             start["trace_id"] = trace_id
         yield start
@@ -278,6 +296,7 @@ class DSEService:
         evaluated = svc.get("evaluated", 0)
         svc.setdefault("coalesced", 0)
         svc.setdefault("memo_hits", 0)
+        svc.setdefault("sampled", 0)
         # the headline number: how many point-prices one evaluation served
         doc["dedup_ratio"] = (round(requested / evaluated, 3)
                               if evaluated else None)

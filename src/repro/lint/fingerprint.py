@@ -86,6 +86,20 @@ LAYERS: Tuple[LayerSpec, ...] = (
             "TpuBackend", "arch_fingerprint")},
     ),
     LayerSpec(
+        name="sampling",
+        version_const="SAMPLING_VERSION",
+        version_module="src/repro/core/sampling/spec.py",
+        # everything that shapes a persisted sampled artifact or the
+        # estimate computed from it: the spec/key schema, the skim and
+        # windowed machines, plan construction, the sampled pipeline, and
+        # the estimator
+        modules=("src/repro/core/sampling/spec.py",
+                 "src/repro/core/sampling/machines.py",
+                 "src/repro/core/sampling/cluster.py",
+                 "src/repro/core/sampling/pipeline.py",
+                 "src/repro/core/sampling/estimate.py"),
+    ),
+    LayerSpec(
         name="store-format",
         version_const="STORE_FORMAT",
         version_module="src/repro/dse/store.py",

@@ -74,6 +74,16 @@ def _layer_tree(tmp_path: pathlib.Path) -> pathlib.Path:
         def arch_fingerprint(workload):
             return workload
     ''')
+    _write(root, "src/repro/core/sampling/spec.py",
+           "SAMPLING_VERSION = 1\n\nclass SamplingSpec:\n    mode = 'exact'\n")
+    _write(root, "src/repro/core/sampling/machines.py",
+           "def skim_program(fn):\n    return fn\n")
+    _write(root, "src/repro/core/sampling/cluster.py",
+           "def build_plan(skim, spec):\n    return skim\n")
+    _write(root, "src/repro/core/sampling/pipeline.py",
+           "def sampled_structural(w, spec):\n    return w\n")
+    _write(root, "src/repro/core/sampling/estimate.py",
+           "def estimate(Y, plan, spec):\n    return Y\n")
     _write(root, "src/repro/dse/store.py", '''
         STORE_FORMAT = 2
         NPZ_FORMAT = 1
